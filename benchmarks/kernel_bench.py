@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-times are NOT TPU-representative — they are recorded for regression
+tracking; the oracle-path timings are the CPU-meaningful numbers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lstm_cell import lstm_cell
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_kernels():
+    rows, csv = [], []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+
+    q = jax.random.normal(ks[0], (1, 4, 512, 64))
+    k = jax.random.normal(ks[1], (1, 2, 512, 64))
+    v = jax.random.normal(ks[2], (1, 2, 512, 64))
+    us = _time(ref.attention_blockwise, q, k, v, causal=True)
+    csv.append(f"attn_blockwise_jnp_512,{us:.0f},B1H4L512D64")
+    us = _time(flash_attention, q, k, v, causal=True, interpret=True, reps=1)
+    csv.append(f"attn_pallas_interp_512,{us:.0f},interpret-mode(not TPU perf)")
+
+    x = jax.random.normal(ks[0], (64, 76))
+    h = jax.random.normal(ks[1], (64, 32))
+    c = jax.random.normal(ks[2], (64, 32))
+    wx = jax.random.normal(ks[0], (76, 4, 32)) * 0.1
+    wh = jax.random.normal(ks[1], (32, 4, 32)) * 0.1
+    b = jnp.zeros((4, 32))
+    us = _time(ref.lstm_cell_reference, x, h, c, wx.reshape(76, 128),
+               wh.reshape(32, 128), b.reshape(128))
+    csv.append(f"lstm_cell_jnp_b64,{us:.0f},icu-sized")
+    us = _time(lstm_cell, x, h, c, wx, wh, b, interpret=True, reps=1)
+    csv.append(f"lstm_cell_pallas_interp_b64,{us:.0f},interpret-mode")
+
+    xs = jax.random.normal(ks[0], (1, 512, 4, 16))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 512, 4)))
+    a = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.5)
+    bm = jax.random.normal(ks[0], (1, 512, 16))
+    cm = jax.random.normal(ks[1], (1, 512, 16))
+    d = jax.random.normal(ks[2], (4,))
+    us = _time(ref.ssm_scan_reference, xs, dt, a, bm, cm, d)
+    csv.append(f"ssm_scan_sequential_jnp_512,{us:.0f},oracle")
+    return rows, csv

@@ -1,0 +1,133 @@
+"""Paper-table reproductions (Tables V & VII, Figures 5 & 6).
+
+Each function returns (rows, csv_lines) where csv_lines follow the
+harness convention ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.icu_lstm import DATA_SIZES, ICU_WORKLOADS
+from repro.core import scheduler
+from repro.core.allocator import allocate_single
+from repro.core.cost_model import CalibratedCostModel, Job, Workload
+from repro.core.lower_bound import paper_lower_bound
+from repro.core.problems import table6_jobs
+from repro.core.tiers import CC, ED, ES, paper_tiers
+
+# Paper Table V: estimated response time (cloud, edge, device) at size 64;
+# the table is exactly linear in size (WL*-k = 2^k * WL*-1), so these base
+# rows ARE the paper's own calibration measurements.
+TABLE5_BASE = {
+    "short-of-breath-alerts": (2091.0, 1279.0, 1394.0),
+    "life-death-prediction": (212.0, 109.0, 79.0),
+    "patient-phenotype-classification": (3115.0, 2931.0, 3618.0),
+}
+TABLE5_CHOSEN = {
+    "short-of-breath-alerts": ES,
+    "life-death-prediction": ED,
+    "patient-phenotype-classification": ES,
+}
+# Paper Table VII (our verified reading: the cloud/edge rows are swapped
+# vs Table VI's transmission columns — DESIGN.md §1)
+TABLE7_PAPER = {
+    "ours (algorithm 2)": (150, 43),
+    "all device": (366, 94),
+    # paper "cloud"=291 == all-edge; paper "edge"=416 == all-cloud
+    "all edge": (291, 74),
+    "all cloud": (416, 100),
+}
+
+
+def _paper_calibrated_model():
+    """CalibratedCostModel from the paper's own size-64 estimates.
+
+    The paper does not publish its D/I split, so transmission at the device
+    tier anchors the split: device has I only, and I scales with the
+    published FLOPS ratios (Table III). D is the remainder."""
+    tiers = paper_tiers()
+    unit_proc, unit_trans = {}, {}
+    for wl, (t_cc, t_es, t_ed) in TABLE5_BASE.items():
+        i_ed = t_ed / 64.0
+        i_cc = i_ed * tiers[ED].flops / tiers[CC].flops
+        i_es = i_ed * tiers[ED].flops / tiers[ES].flops
+        unit_proc[(wl, CC)], unit_proc[(wl, ES)] = i_cc, i_es
+        unit_proc[(wl, ED)] = i_ed
+        unit_trans[(wl, CC)] = t_cc / 64.0 - i_cc
+        unit_trans[(wl, ES)] = t_es / 64.0 - i_es
+        unit_trans[(wl, ED)] = 0.0
+    return CalibratedCostModel(tiers, unit_proc, unit_trans)
+
+
+def bench_table5():
+    """Table V: Algorithm 1 estimates for all 18 workloads.
+
+    derived = '<decisions-matching-paper>/18;max_rel_err=<v>'."""
+    cm = _paper_calibrated_model()
+    t0 = time.perf_counter()
+    rows, match, max_err = [], 0, 0.0
+    for wl_cfg in ICU_WORKLOADS:
+        wl = Workload(wl_cfg.name, comp=wl_cfg.paper_flops, unit_bytes=1.0,
+                      priority=wl_cfg.priority)
+        for k, size in enumerate(DATA_SIZES):
+            alloc = allocate_single(cm, Job(wl, size=size))
+            est = alloc.per_tier_response
+            paper = tuple(v * size / 64.0
+                          for v in TABLE5_BASE[wl_cfg.name])
+            err = max(abs(est[t] - p) / p for t, p in
+                      zip((CC, ES, ED), paper))
+            max_err = max(max_err, err)
+            match += alloc.tier == TABLE5_CHOSEN[wl_cfg.name]
+            rows.append((f"WL{ICU_WORKLOADS.index(wl_cfg)+1}-{k+1}",
+                         alloc.tier, est[CC], est[ES], est[ED]))
+    us = (time.perf_counter() - t0) / 18 * 1e6
+    csv = [f"table5_alg1,{us:.1f},decisions={match}/18;"
+           f"max_rel_err={max_err:.2e}"]
+    return rows, csv
+
+
+def bench_table7():
+    """Table VII: multi-job strategy comparison on the Table VI job set."""
+    jobs = table6_jobs()
+    t0 = time.perf_counter()
+    table = scheduler.strategy_table(jobs)
+    us = (time.perf_counter() - t0) * 1e6
+    opt = scheduler.exact_optimum(jobs, objective="unweighted")
+    lb = paper_lower_bound(jobs, weighted=False)
+    rows, csv = [], []
+    for name, sched in table.items():
+        paper = TABLE7_PAPER.get(name)
+        rows.append((name, sched.unweighted_sum, sched.last_end, paper))
+        tag = name.replace(" ", "_").replace("(", "").replace(")", "")
+        d = f"whole={sched.unweighted_sum:.0f};last={sched.last_end:.0f}"
+        if paper:
+            d += f";paper={paper[0]}/{paper[1]}"
+        csv.append(f"table7_{tag},{us:.1f},{d}")
+    csv.append(f"table7_exact_optimum,{us:.1f},whole={opt.unweighted_sum:.0f}"
+               f";lower_bound={lb:.0f}")
+    return rows, csv
+
+
+def bench_fig5_fig6():
+    """Figures 5-6: per-layer response + processing/transmission breakdown
+    for the largest size (WL*-6), from the paper-calibrated model."""
+    cm = _paper_calibrated_model()
+    rows, csv = [], []
+    t0 = time.perf_counter()
+    for wl_cfg in ICU_WORKLOADS:
+        wl = Workload(wl_cfg.name, comp=wl_cfg.paper_flops, unit_bytes=1.0)
+        job = Job(wl, size=DATA_SIZES[-1])
+        per = cm.times(job)
+        for tier in (CC, ES, ED):
+            d, i = per[tier]
+            rows.append((wl_cfg.name, tier, d, i))
+        best = min(per, key=lambda t: sum(per[t]))
+        short = wl_cfg.name.split("-")[0]
+        csv.append(
+            f"fig6_breakdown_{short},"
+            f"{(time.perf_counter()-t0)*1e6:.1f},"
+            f"best={best};trans_frac_edge="
+            f"{per[ES][0]/(per[ES][0]+per[ES][1]):.2f}")
+    return rows, csv

@@ -1,0 +1,166 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run artifacts (experiments/dryrun/*.json).
+
+    compute    = FLOPs / (chips x 197 TFLOP/s)
+    memory     = bytes_moved / (chips x 819 GB/s)
+    collective = collective_bytes_per_chip / 50 GB/s ICI
+
+FLOPs/bytes use the analytic accounting (utils.flops + the byte model
+below): XLA's cost_analysis counts while-loop bodies ONCE (verified — see
+EXPERIMENTS.md §Dry-run), so the compiled numbers are recorded in the JSON
+but are not usable as totals. collective_bytes comes from the partitioned
+HLO text and IS per-chip (the SPMD program is per-device), with the same
+while-loop caveat noted per row where scans carry collectives.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.tiers import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_FLOPS
+from repro.launch.dryrun import variant_for_shape
+from repro.utils import flops as F
+
+ADAM_BYTES = 16   # m, v f32 read+write amortised (8B read + 8B write)
+
+
+def analytic_bytes(arch: str, shape_name: str,
+                   kv_dtype: str = "native") -> float:
+    """Bytes moved through HBM per step (global, all chips)."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = variant_for_shape(get_config(arch), shape)
+    kv_byte = 1 if kv_dtype == "int8" else 2
+    pbytes = F.param_bytes(cfg)
+    d = cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        layers = max(cfg.num_layers, 1)
+        # params: fwd read + bwd read + grad write f32 + adam state traffic
+        param_traffic = pbytes * 2 + F.param_count(cfg) * (4 + ADAM_BYTES)
+        # activations: residual write+read per layer (+remat recompute read)
+        act_traffic = tokens * d * 2 * layers * 3
+        return param_traffic + act_traffic
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return pbytes + tokens * d * 2 * cfg.num_layers * 2
+    # decode: every live param read once + KV/state read
+    kv = 0.0
+    win = cfg.attn_window or cfg.long_context_window
+    ctx = min(win, shape.seq_len) if win else shape.seq_len
+    n_attn, n_cross = F._attn_layers(cfg)
+    kv += (2 * n_attn * cfg.num_kv_heads * cfg.head_dim * ctx
+           * kv_byte * shape.global_batch)
+    kv += (2 * n_cross * cfg.num_kv_heads * cfg.head_dim
+           * cfg.cross_attn_states * kv_byte * shape.global_batch)
+    # recurrent states
+    d_inner = cfg.ssm_expand * d
+    for k in tuple(cfg.group_pattern) * cfg.num_groups:
+        if k == "mamba":
+            kv += (cfg.ssm_num_heads * cfg.ssm_head_dim * cfg.ssm_state_dim
+                   * 4 * 2 * shape.global_batch)
+        elif k == "mlstm":
+            ph = d_inner // max(1, cfg.ssm_num_heads)
+            kv += cfg.ssm_num_heads * ph * ph * 4 * 2 * shape.global_batch
+    active_bytes = pbytes * F.active_param_count(cfg) / F.param_count(cfg)
+    return active_bytes + kv
+
+
+def load_records(art_dir: str, mesh: str = "16x16"):
+    recs = {}
+    for fn in glob.glob(os.path.join(art_dir, f"*_{mesh}.json")):
+        with open(fn) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = rec["devices"]
+    arch, shape_name = rec["arch"], rec["shape"]
+    fl = rec["analytic_step_flops"]
+    by = analytic_bytes(arch, shape_name,
+                        rec.get("kv_cache_dtype", "native"))
+    coll = rec["collectives"]["total_bytes"]
+    t_c = fl / (chips * TPU_PEAK_FLOPS)
+    t_m = by / (chips * TPU_HBM_BW)
+    t_n = coll / TPU_ICI_BW            # HLO is per-chip already
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    dom = max(terms, key=terms.get)
+    useful = rec["model_flops_6nd"] / fl if fl else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom,
+        "model_flops": rec["model_flops_6nd"],
+        "analytic_flops": fl,
+        "useful_ratio": useful,
+        "hlo_flops_per_chip": rec["hlo_flops"],
+        "temp_gb_per_chip": rec["memory"].get("temp_size_in_bytes", 0) / 1e9,
+        "collective_gb_per_chip": coll / 1e9,
+        "microbatches": rec.get("microbatches", 1),
+        "long_context_variant": rec.get("long_context_variant", False),
+    }
+
+
+SUGGESTIONS = {
+    "compute": "compute-bound: raise per-chip utilisation (larger "
+               "microbatch, fused kernels); already near the best regime",
+    "memory": "memory-bound: cut HBM traffic (quantised KV cache, "
+              "wider batching to amortise weight reads)",
+    "collective": "collective-bound: reshard to cut gathers (replicated "
+                  "residual, EP all-to-all for MoE, overlap collectives "
+                  "with compute)",
+}
+
+
+def bench_roofline(art_dir: str = "experiments/dryrun"):
+    recs = load_records(art_dir)
+    rows, csv = [], []
+    for (arch, shape_name), rec in sorted(recs.items()):
+        row = roofline_row(rec)
+        rows.append(row)
+        csv.append(
+            f"roofline_{arch}_{shape_name},0,"
+            f"dom={row['dominant']};compute_ms={row['compute_s']*1e3:.3f};"
+            f"memory_ms={row['memory_s']*1e3:.3f};"
+            f"collective_ms={row['collective_s']*1e3:.3f};"
+            f"useful={row['useful_ratio']:.2f}")
+    return rows, csv
+
+
+def compare_baseline(base_dir: str = "experiments/dryrun_baseline",
+                     opt_dir: str = "experiments/dryrun",
+                     mesh: str = "16x16"):
+    """§Perf before/after: collective bytes + temp per case, baseline
+    (paper-faithful first-pass sharding) vs optimized stack."""
+    base = load_records(base_dir, mesh)
+    opt = load_records(opt_dir, mesh)
+    csv = []
+    for key in sorted(set(base) & set(opt)):
+        b = base[key]["collectives"]["total_bytes"]
+        o = opt[key]["collectives"]["total_bytes"]
+        bt = base[key]["memory"].get("temp_size_in_bytes", 0)
+        ot = opt[key]["memory"].get("temp_size_in_bytes", 0)
+        csv.append(
+            f"perf_delta_{key[0]}_{key[1]},0,"
+            f"collective_GB={b/1e9:.2f}->{o/1e9:.2f}"
+            f"(x{b/max(o,1):.1f});temp_GB={bt/1e9:.1f}->{ot/1e9:.1f}")
+    return csv
+
+
+def to_markdown(rows) -> str:
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) "
+           "| dominant | useful 6ND/analytic | temp GB/chip | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["shape"], r["arch"])):
+        note = "SWA variant" if r["long_context_variant"] else ""
+        if r["microbatches"] > 1:
+            note += f" mb={r['microbatches']}"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.3f} | "
+            f"{r['memory_s']*1e3:.3f} | {r['collective_s']*1e3:.3f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['temp_gb_per_chip']:.1f} | {note} |")
+    return "\n".join(out)

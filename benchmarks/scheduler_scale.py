@@ -1,0 +1,82 @@
+"""Scheduler benchmarks beyond the paper's scale: the JAX-vectorised
+evaluator vs the Python simulator, and heuristic quality vs exact optimum
+over random fleets."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import scheduler, scheduler_jax
+from repro.core.simulator import MACHINES, JobSpec
+from repro.core.tiers import CC, ED, ES
+
+
+def _random_jobs(rng, n):
+    jobs = []
+    for i in range(n):
+        jobs.append(JobSpec(
+            name=f"J{i}", release=float(rng.integers(0, 50)),
+            weight=float(rng.integers(1, 3)),
+            proc={t: float(rng.integers(1, 30)) for t in MACHINES},
+            trans={CC: float(rng.integers(0, 60)),
+                   ES: float(rng.integers(0, 15)), ED: 0.0}))
+    return jobs
+
+
+def bench_scheduler_scale():
+    rng = np.random.default_rng(0)
+    rows, csv = [], []
+
+    # 1) Python tabu search at the paper's scale and 10x
+    for n in (10, 50, 100):
+        jobs = _random_jobs(rng, n)
+        t0 = time.perf_counter()
+        s = scheduler.neighborhood_search(jobs, max_count=5)
+        dt = time.perf_counter() - t0
+        base = scheduler.per_job_optimal(jobs)
+        gain = 1.0 - s.weighted_sum / base.weighted_sum
+        rows.append(("tabu", n, dt, gain))
+        csv.append(f"sched_tabu_n{n},{dt*1e6:.0f},"
+                   f"gain_vs_perjob={gain:.2%}")
+
+    # 2) JAX batched evaluation throughput
+    jobs = _random_jobs(rng, 50)
+    rel, w, proc, trans = scheduler_jax.specs_to_arrays(jobs)
+    assigns = jax.numpy.asarray(rng.integers(0, 3, size=(4096, 50)),
+                                jax.numpy.int32)
+    scheduler_jax.evaluate_assignments(assigns, rel, w, proc, trans)  # warm
+    t0 = time.perf_counter()
+    m = scheduler_jax.evaluate_assignments(assigns, rel, w, proc, trans)
+    jax.block_until_ready(m["weighted"])
+    dt = time.perf_counter() - t0
+    per = dt / 4096 * 1e6
+    rows.append(("jax_eval", 4096, dt, per))
+    csv.append(f"sched_jax_eval_4096x50,{per:.2f},candidates_per_s="
+               f"{4096/dt:.0f}")
+
+    # 3) heuristic optimality gap on small instances
+    gaps = []
+    for seed in range(5):
+        jobs = _random_jobs(np.random.default_rng(seed), 8)
+        ours = scheduler.neighborhood_search(jobs)
+        v, _ = scheduler_jax.exact_optimum_jax(jobs, objective="weighted")
+        gaps.append(ours.weighted_sum / max(v, 1e-9) - 1.0)
+    csv.append(f"sched_optimality_gap_n8,0,mean_gap={np.mean(gaps):.2%};"
+               f"max_gap={np.max(gaps):.2%}")
+
+    # 4) online (non-clairvoyant) competitive ratio — beyond paper
+    from repro.core import online
+    ratios_g, ratios_t = [], []
+    for seed in range(8):
+        jobs = _random_jobs(np.random.default_rng(seed + 100), 12)
+        off = scheduler.neighborhood_search(jobs).weighted_sum
+        ratios_g.append(online.online_schedule(jobs, replan="greedy")
+                        .weighted_sum / max(off, 1e-9))
+        ratios_t.append(online.online_schedule(jobs, replan="tabu")
+                        .weighted_sum / max(off, 1e-9))
+    csv.append(f"sched_online_competitive,0,"
+               f"greedy={np.mean(ratios_g):.3f};"
+               f"tabu_replan={np.mean(ratios_t):.3f}")
+    return rows, csv

@@ -1,0 +1,60 @@
+"""Long-context decode across architecture families (the long_500k story
+at CPU-runnable scale).
+
+Compares decode state growth: recurrent archs (xlstm) carry O(1) state,
+SWA archs (mixtral) carry O(window), full-attention archs carry O(context)
+— the reason long_500k is restricted to sub-quadratic archs (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/long_context_decode.py
+"""
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.data.pipeline import make_batch
+from repro.models import build_model
+
+
+def cache_bytes(cache):
+    return sum(np.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree.leaves(cache))
+
+
+def main():
+    ctx = 512   # stand-in for 500k at CPU scale; scaling is the point
+    for arch, note in (("xlstm-350m", "recurrent: O(1) state"),
+                       ("zamba2-2.7b", "hybrid: O(1) mamba + shared KV"),
+                       ("mixtral-8x7b", "SWA: O(window) ring buffer"),
+                       ("qwen2-1.5b", "full attention: O(context) KV")):
+        cfg = get_config(arch).reduced(
+            layers=2 if len(get_config(arch).group_pattern) <= 2 else None,
+            d_model=128, vocab=256)
+        if arch == "mixtral-8x7b":
+            import dataclasses
+            cfg = dataclasses.replace(cfg, attn_window=64)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        sizes = []
+        for c in (ctx // 4, ctx // 2, ctx):
+            batch = make_batch(cfg, 1, c, seed=1)
+            _, cache = model.prefill(params, batch, max_len=c + 8)
+            sizes.append(cache_bytes(cache))
+        t0 = time.perf_counter()
+        tok = batch["tokens"][:, -1]
+        for _ in range(4):
+            logits, cache = model.decode_step(params, tok, cache)
+            tok = jax.numpy.argmax(logits, -1).astype(jax.numpy.int32)
+        dt = (time.perf_counter() - t0) / 4
+        growth = sizes[-1] / sizes[0]
+        print(f"{arch:16s} cache@{ctx//4}/{ctx//2}/{ctx} tokens = "
+              f"{sizes[0]//1024}/{sizes[1]//1024}/{sizes[2]//1024} KiB "
+              f"(x{growth:.1f})  decode {dt*1e3:.0f} ms/tok  <- {note}")
+
+
+if __name__ == "__main__":
+    main()

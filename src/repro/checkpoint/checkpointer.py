@@ -1,0 +1,56 @@
+"""Sharded-friendly checkpointing to .npz (no orbax in this container).
+
+Leaves are addressed by their pytree key-path string, so restore is
+structure-checked. On a multi-host run each host would save its addressable
+shards (path includes the process index); in this single-process container
+that degenerates to one file, but the layout is the production one.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, process_index: int = 0):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_path_str(p): np.asarray(v) for p, v in flat}
+    fn = os.path.join(ckpt_dir, f"step_{step:08d}.proc{process_index}.npz")
+    np.savez(fn, **arrays)
+    meta = {"step": step, "leaves": len(arrays)}
+    with open(os.path.join(ckpt_dir, "latest.json"), "w") as f:
+        json.dump(meta, f)
+    return fn
+
+
+def latest_step(ckpt_dir: str) -> int:
+    with open(os.path.join(ckpt_dir, "latest.json")) as f:
+        return json.load(f)["step"]
+
+
+def restore(ckpt_dir: str, template: Any, step: int | None = None, *,
+            process_index: int = 0) -> Any:
+    """Restore into the structure of `template` (shapes/dtypes checked)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    fn = os.path.join(ckpt_dir, f"step_{step:08d}.proc{process_index}.npz")
+    data = np.load(fn)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, tmpl in paths:
+        key = _path_str(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {tmpl.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

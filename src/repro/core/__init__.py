@@ -1,0 +1,11 @@
+# The paper's primary contribution: hierarchical cloud/edge/device workload
+# allocation. tiers/cost_model/allocator implement Section III-IV
+# (Algorithm 1); simulator/scheduler implement Section V-VI (Algorithm 2);
+# scheduler_jax adds vectorised on-device schedule search (beyond paper).
+from repro.core.allocator import Allocation, allocate_single  # noqa: F401
+from repro.core.cost_model import (AnalyticCostModel,  # noqa: F401
+                                   CalibratedCostModel, Job,
+                                   RooflineCostModel, Workload)
+from repro.core.simulator import JobSpec, Schedule, simulate  # noqa: F401
+from repro.core.tiers import (CC, ED, ES, TierSpec, paper_tiers,  # noqa: F401
+                              tpu_tiers)

@@ -1,0 +1,26 @@
+"""Lower bounds for the multi-job problem (paper eq. 6 + tighter extras)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.simulator import MACHINES, JobSpec
+from repro.core.tiers import CC, ES
+
+
+def paper_lower_bound(jobs: Sequence[JobSpec],
+                      weighted: bool = True) -> float:
+    """Eq. (6): every job takes its stand-alone minimum response time."""
+    total = 0.0
+    for j in jobs:
+        best = min(j.response_if_alone(t) for t in MACHINES)
+        total += (j.weight if weighted else 1.0) * best
+    return total
+
+
+def load_lower_bound(jobs: Sequence[JobSpec]) -> float:
+    """Tighter last-completion bound: a shared machine cannot finish its
+    assigned work before the sum of processing times after the earliest
+    arrival — minimised over which jobs could avoid that machine entirely.
+    Conservative version: max over jobs of their best-case completion."""
+    return max(j.release + min(j.response_if_alone(t) for t in MACHINES)
+               for j in jobs)

@@ -1,0 +1,52 @@
+"""Bridges between cost models / paper tables and scheduler JobSpecs."""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence
+
+from repro.core.cost_model import CostModel, Job
+from repro.core.simulator import JobSpec
+from repro.core.tiers import CC, ED, ES
+
+
+def jobs_to_specs(cost_model: CostModel, jobs: Sequence[Job],
+                  normalize: float | None = None) -> List[JobSpec]:
+    """Turn Jobs + a CostModel into scheduler rows.
+
+    normalize: if set, divide all times by this quantum and round up to
+    integers (paper constraint C3)."""
+    specs = []
+    for job in jobs:
+        proc, trans = {}, {}
+        for tier, (d, i) in cost_model.times(job).items():
+            if normalize:
+                d = math.ceil(d / normalize)
+                i = max(1, math.ceil(i / normalize))
+            proc[tier], trans[tier] = i, d
+        specs.append(JobSpec(name=job.name or job.workload.name,
+                             release=job.release, weight=job.priority,
+                             proc=proc, trans=trans))
+    return specs
+
+
+def table6_jobs() -> List[JobSpec]:
+    """The paper's Table VI experimental job set, verbatim.
+
+    Columns: release, weight, cloud (proc, trans), edge (proc, trans),
+    device proc."""
+    rows = [
+        ("J1", 1, 2, 6, 56, 9, 11, 14),
+        ("J2", 1, 2, 3, 32, 3, 6, 12),
+        ("J3", 3, 1, 4, 12, 6, 2, 49),
+        ("J4", 5, 1, 7, 23, 11, 5, 69),
+        ("J5", 10, 2, 4, 27, 5, 5, 11),
+        ("J6", 20, 2, 5, 70, 5, 14, 22),
+        ("J7", 21, 2, 5, 70, 5, 14, 22),
+        ("J8", 21, 1, 4, 12, 6, 2, 49),
+        ("J9", 22, 1, 4, 12, 6, 2, 49),
+        ("J10", 25, 1, 7, 23, 11, 5, 69),
+    ]
+    return [JobSpec(name=n, release=r, weight=w,
+                    proc={CC: pc, ES: pe, ED: pd},
+                    trans={CC: tc, ES: te, ED: 0.0})
+            for (n, r, w, pc, tc, pe, te, pd) in rows]

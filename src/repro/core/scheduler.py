@@ -1,0 +1,132 @@
+"""Algorithm 2 — multi-job allocation heuristic (paper Section VI).
+
+Pipeline:
+  1. greedy initial solution: jobs in release order (tie: priority desc),
+     each assigned to the machine minimising its completion time given the
+     machine free-times so far ("the earliest released job gets the
+     shortest response time");
+  2. tabu-guarded neighbourhood search: repeatedly pick the
+     earliest-completing non-tabu job, try moving it to every other
+     machine, keep the move with the largest positive reduction of the
+     weighted whole response time (paper lines 10-28);
+  3. every candidate is evaluated with the exact discrete-event simulator
+     (core.simulator), so reported numbers always reflect C1-C5 semantics.
+
+Also provides baseline strategies (Table VII comparison set) and an exact
+brute-force optimum for small n (the paper has none — we add it to measure
+the heuristic's optimality gap).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Sequence
+
+from repro.core.simulator import (MACHINES, JobSpec, Schedule, simulate)
+from repro.core.tiers import CC, ED, ES
+
+
+# --------------------------------------------------------------- strategies
+def all_on_tier(jobs: Sequence[JobSpec], tier: str) -> Schedule:
+    return simulate(jobs, [tier] * len(jobs))
+
+
+def per_job_optimal(jobs: Sequence[JobSpec]) -> Schedule:
+    """Table VII row 2: each job on its own Algorithm-1-optimal tier,
+    ignoring queueing."""
+    assign = [min(MACHINES, key=lambda t: j.response_if_alone(t))
+              for j in jobs]
+    return simulate(jobs, assign)
+
+
+# ------------------------------------------------------------------ greedy
+def greedy_schedule(jobs: Sequence[JobSpec]) -> List[str]:
+    """Initial feasible solution (Algorithm 2 step 1)."""
+    order = sorted(range(len(jobs)),
+                   key=lambda i: (jobs[i].release, -jobs[i].weight, i))
+    free: Dict[str, float] = {CC: 0.0, ES: 0.0}
+    assign: List[str] = [""] * len(jobs)
+    for i in order:
+        job = jobs[i]
+        best_t, best_end = None, float("inf")
+        for tier in (ED, ES, CC):    # tie -> prefer lower tier
+            arr = job.release + job.trans.get(tier, 0.0)
+            start = arr if tier == ED else max(arr, free[tier])
+            end = start + job.proc[tier]
+            if end < best_end:
+                best_t, best_end = tier, end
+        assign[i] = best_t
+        if best_t != ED:
+            free[best_t] = best_end
+    return assign
+
+
+# ------------------------------------------------- Algorithm 2 (tabu search)
+def neighborhood_search(jobs: Sequence[JobSpec],
+                        initial: Sequence[str] | None = None,
+                        max_count: int = 50,
+                        objective: str = "weighted") -> Schedule:
+    """Paper Algorithm 2. objective: "weighted" (eq. 5) | "unweighted"."""
+    assign = list(initial or greedy_schedule(jobs))
+
+    def score(a: Sequence[str]) -> float:
+        s = simulate(jobs, a)
+        return s.weighted_sum if objective == "weighted" else s.unweighted_sum
+
+    best = score(assign)
+    for _ in range(max_count):
+        tabu_job = [False] * len(jobs)
+        improved_this_round = False
+        for _inner in range(len(jobs)):
+            # earliest-completing non-tabu job (paper line 15)
+            sched = simulate(jobs, assign)
+            ends = {id(e.job): e.end for e in sched.entries}
+            cand = [i for i in range(len(jobs)) if not tabu_job[i]]
+            if not cand:
+                break
+            k = min(cand, key=lambda i: ends[id(jobs[i])])
+            tabu_job[k] = True
+            # best move for job k across machines (paper lines 17-25)
+            v_max, move = 0.0, None
+            for tier in MACHINES:
+                if tier == assign[k]:
+                    continue
+                trial = list(assign)
+                trial[k] = tier
+                v = best - score(trial)
+                if v > v_max:
+                    v_max, move = v, tier
+            if move is not None:
+                assign[k] = move
+                best -= v_max
+                improved_this_round = True
+        if not improved_this_round:
+            break
+    return simulate(jobs, assign)
+
+
+# ------------------------------------------------------------- exact optimum
+def exact_optimum(jobs: Sequence[JobSpec],
+                  objective: str = "weighted") -> Schedule:
+    """Brute-force over all 3^n assignments (n <= ~12). The paper offers no
+    optimality baseline; we use this to report the heuristic's gap."""
+    n = len(jobs)
+    assert n <= 12, "use scheduler_jax.exact_optimum_jax for larger n"
+    best_s, best_v = None, float("inf")
+    for combo in itertools.product(MACHINES, repeat=n):
+        s = simulate(jobs, combo)
+        v = s.weighted_sum if objective == "weighted" else s.unweighted_sum
+        if v < best_v:
+            best_s, best_v = s, v
+    return best_s
+
+
+# -------------------------------------------------------------- comparison
+def strategy_table(jobs: Sequence[JobSpec]) -> Dict[str, Schedule]:
+    """The paper's Table VII comparison set + our extras."""
+    return {
+        "ours (algorithm 2)": neighborhood_search(jobs),
+        "per-job optimal layer": per_job_optimal(jobs),
+        "all cloud": all_on_tier(jobs, CC),
+        "all edge": all_on_tier(jobs, ES),
+        "all device": all_on_tier(jobs, ED),
+    }

@@ -1,0 +1,102 @@
+"""Discrete-event evaluator for multi-job schedules (paper Section V).
+
+Semantics (constraints C1-C5, validated against the paper's Table VII —
+see DESIGN.md §1):
+  * arrival_at_machine = release + transmission  (C4: data ships ahead and
+    queues; transmission overlaps other jobs' processing)
+  * shared machines (cloud, edge) run one job at a time, non-preemptive
+    (C1, C2), FIFO by arrival (tie: release, then job index)
+  * the device tier is private — every job has its own end device, so
+    device jobs never queue (paper Section V.A)
+  * response of job i = E_i - R_i, weighted by priority w_i (eq. 5)
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Sequence
+
+from repro.core.tiers import CC, ED, ES, TIER_ORDER
+
+MACHINES = list(TIER_ORDER)          # ["cloud", "edge", "device"]
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """Scheduler-facing view of a job: the (proc, trans) row per tier.
+
+    Built either from a CostModel (core.problems.jobs_to_specs) or directly
+    from a paper table (benchmarks/table7).
+    """
+    name: str
+    release: float
+    weight: float
+    proc: Mapping[str, float]        # tier -> I_i
+    trans: Mapping[str, float]       # tier -> D_i (device: 0)
+
+    def response_if_alone(self, tier: str) -> float:
+        return self.proc[tier] + self.trans[tier]
+
+
+@dataclass(frozen=True)
+class ScheduledJob:
+    job: JobSpec
+    machine: str
+    arrival: float
+    start: float
+    end: float
+
+    @property
+    def response(self) -> float:
+        return self.end - self.job.release
+
+
+@dataclass(frozen=True)
+class Schedule:
+    entries: List[ScheduledJob]
+    weighted_sum: float              # eq. (5): sum w_i (E_i - R_i)
+    unweighted_sum: float            # what the paper's Table VII reports
+    last_end: float                  # "Last Response Time"
+
+    def assignment(self) -> List[str]:
+        return [e.machine for e in self.entries]
+
+
+def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
+             machines_per_tier: Mapping[str, int] | None = None) -> Schedule:
+    """Evaluate a fixed job->tier assignment under the C1-C5 semantics."""
+    assert len(jobs) == len(assignment)
+    machines_per_tier = machines_per_tier or {CC: 1, ES: 1}
+    entries: List[ScheduledJob | None] = [None] * len(jobs)
+
+    # private tier: no queueing
+    for idx, (job, tier) in enumerate(zip(jobs, assignment)):
+        if tier == ED:
+            arr = job.release + job.trans.get(ED, 0.0)
+            entries[idx] = ScheduledJob(job, ED, arr, arr,
+                                        arr + job.proc[ED])
+
+    # shared tiers: FIFO by (arrival, release, index) over a free-time heap
+    for tier in (CC, ES):
+        queue = sorted(
+            (i for i, t in enumerate(assignment) if t == tier),
+            key=lambda i: (jobs[i].release + jobs[i].trans[tier],
+                           jobs[i].release, i))
+        free = [0.0] * machines_per_tier.get(tier, 1)
+        heapq.heapify(free)
+        for i in queue:
+            job = jobs[i]
+            arr = job.release + job.trans[tier]
+            avail = heapq.heappop(free)
+            start = max(arr, avail)
+            end = start + job.proc[tier]
+            heapq.heappush(free, end)
+            entries[i] = ScheduledJob(job, tier, arr, start, end)
+
+    done = [e for e in entries if e is not None]
+    assert len(done) == len(jobs)
+    weighted = sum(e.job.weight * e.response for e in done)
+    unweighted = sum(e.response for e in done)
+    last = max(e.end for e in done) if done else 0.0
+    return Schedule(entries=done, weighted_sum=weighted,
+                    unweighted_sum=unweighted, last_end=last)

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the compute hot-spots (flash attention, fused LSTM
+# cell, Mamba2 chunked SSM scan, xLSTM chunkwise mLSTM), each with a pure-jnp
+# oracle in ref.py and jit'd public wrappers in ops.py.
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,157 @@
+"""Pallas TPU flash attention (forward) — causal / sliding-window / softcap / GQA.
+
+TPU-native design notes (HBM->VMEM->MXU):
+  * Grid = (batch, q_heads, q_blocks, k_blocks); the k_blocks axis is
+    "arbitrary" (sequential) so the online-softmax running state lives in
+    VMEM scratch and is carried across k iterations — the canonical TPU
+    flash schedule (no atomics / warp shuffles; the GPU algorithm's
+    shared-memory tiling becomes BlockSpec VMEM tiling).
+  * Block shapes default to (128, head_dim) q-tiles x (128, head_dim)
+    k-tiles: MXU-aligned (multiples of 128 on the contracting and lane
+    dims), VMEM working set = bq*d + 2*bk*d + acc ~ a few hundred KiB.
+  * m/l running stats are kept as (bq, 128) lane-replicated f32 tiles, the
+    standard TPU trick to keep reductions on the VPU 8x128 registers.
+  * Fully-masked (q,k) block pairs are skipped with pl.when on block
+    indices (causal upper triangle, out-of-window lower band).
+
+Validated in interpret mode against kernels.ref.attention_reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], bq: int, bk: int,
+                  num_kb: int, q_offset: int):
+    """One (q-block, k-block) step of online-softmax attention."""
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions: queries are aligned to the END of the kv sequence
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level skip: is any (q, k) pair in this tile live?
+    q_first, q_last = qi * bq + q_offset, qi * bq + bq - 1 + q_offset
+    k_first, k_last = ki * bk, ki * bk + bk - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_first <= q_last
+    if window is not None:
+        live &= k_last > q_first - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]                           # (bq, LANES)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)   # (bq, 1)
+        m_cur = jnp.broadcast_to(m_cur, m_prev.shape)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard: rows with everything masked keep m = NEG_INF; exp(0)=1 would
+        # pollute l, so clamp the correction for those rows.
+        alpha = jnp.exp(m_prev - m_new)
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, alpha)
+        p = jnp.exp(logits - m_new[:, :1])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + jnp.broadcast_to(
+            jnp.sum(p, axis=-1, keepdims=True), l_prev.shape)
+        acc_scr[...] = acc_scr[...] * alpha[:, :1] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == num_kb - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)               # fully-masked rows -> 0
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q",
+                     "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D). Returns (B, Hq, Lq, D).
+
+    Queries are aligned to the end of the key sequence (decode convention).
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bq = min(block_q, lq)
+    bk = min(block_k, lk)
+    assert lq % bq == 0 and lk % bk == 0, (lq, bq, lk, bk)
+    num_qb, num_kb = lq // bq, lk // bk
+    q_offset = lk - lq
+
+    grid = (b, hq, num_qb, num_kb)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, num_kb=num_kb, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),   # running max m
+            pltpu.VMEM((bq, LANES), jnp.float32),   # running denominator l
+            pltpu.VMEM((bq, d), jnp.float32),       # un-normalised accumulator
+        ],
+        interpret=interpret,
+        name="flash_attention_fwd",
+    )(q, k, v)

@@ -1,0 +1,93 @@
+"""Pallas TPU fused LSTM cell — the paper's ICU-workload hot-spot.
+
+The paper's three medical applications are all LSTM classifiers; their
+inference inner loop is the per-timestep cell update. On GPU this is a
+cuDNN fused op; the TPU-native formulation is a single Pallas kernel that
+keeps the (x, h) tiles and the gate weight tiles in VMEM, issues two MXU
+matmuls per gate tile, and fuses the element-wise gate math on the VPU —
+one HBM round-trip per step instead of five (4 gate matmuls + pointwise).
+
+Weights are laid out (I, 4, H) / (H, 4, H) so a hidden-tile block slices all
+four gates contiguously (gate axis is a leading block dim, H stays on lanes).
+
+Validated in interpret mode against kernels.ref.lstm_cell_reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                 h_out_ref, c_out_ref):
+    x = x_ref[...].astype(jnp.float32)            # (bb, I)
+    h = h_ref[...].astype(jnp.float32)            # (bb, H)
+    c = c_ref[...].astype(jnp.float32)            # (bb, bh)
+
+    def gate(g):
+        wx = wx_ref[:, g, :].astype(jnp.float32)  # (I, bh)
+        wh = wh_ref[:, g, :].astype(jnp.float32)  # (H, bh)
+        return (jax.lax.dot_general(x, wx, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+                + jax.lax.dot_general(h, wh, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+                + b_ref[g, :].astype(jnp.float32))
+
+    i = jax.nn.sigmoid(gate(0))
+    f = jax.nn.sigmoid(gate(1))
+    g = jnp.tanh(gate(2))
+    o = jax.nn.sigmoid(gate(3))
+    c_new = f * c + i * g
+    h_out_ref[...] = (o * jnp.tanh(c_new)).astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_h", "interpret"))
+def lstm_cell(x: jax.Array, h: jax.Array, c: jax.Array, wx: jax.Array,
+              wh: jax.Array, b: jax.Array, *, block_b: int = 128,
+              block_h: int = 128,
+              interpret: Optional[bool] = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, I); h, c: (B, H); wx: (I, 4, H); wh: (H, 4, H); b: (4, H).
+
+    Gate order i, f, g, o. Returns (h', c') with h/c dtypes.
+    """
+    bsz, i_dim = x.shape
+    _, h_dim = h.shape
+    assert wx.shape == (i_dim, 4, h_dim), wx.shape
+    assert wh.shape == (h_dim, 4, h_dim), wh.shape
+    assert b.shape == (4, h_dim), b.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bb = min(block_b, bsz)
+    bh = min(block_h, h_dim)
+    assert bsz % bb == 0 and h_dim % bh == 0
+
+    grid = (bsz // bb, h_dim // bh)
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, i_dim), lambda bi, hi: (bi, 0)),
+            pl.BlockSpec((bb, h_dim), lambda bi, hi: (bi, 0)),
+            pl.BlockSpec((bb, bh), lambda bi, hi: (bi, hi)),
+            pl.BlockSpec((i_dim, 4, bh), lambda bi, hi: (0, 0, hi)),
+            pl.BlockSpec((h_dim, 4, bh), lambda bi, hi: (0, 0, hi)),
+            pl.BlockSpec((4, bh), lambda bi, hi: (0, hi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bh), lambda bi, hi: (bi, hi)),
+            pl.BlockSpec((bb, bh), lambda bi, hi: (bi, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h_dim), h.dtype),
+            jax.ShapeDtypeStruct((bsz, h_dim), c.dtype),
+        ],
+        interpret=interpret,
+        name="lstm_cell",
+    )(x, h, c, wx, wh, b)

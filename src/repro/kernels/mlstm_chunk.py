@@ -1,0 +1,139 @@
+"""Pallas TPU chunkwise-parallel mLSTM (xLSTM matrix memory, arXiv:2405.04517).
+
+The mLSTM recurrence with exponential input gates needs running max
+stabilisation; the chunkwise-parallel form used here telescopes the
+per-step stabiliser into
+
+    b_t  = cumsum(logsigmoid(f))          per-chunk forget log-decay
+    g_u  = i_u - b_u
+    cm_t = max(m_in, cummax_{u<=t} g_u)   running stabiliser
+    m_t  = b_t + cm_t
+    w_tu = exp(g_u - cm_t) [u<=t]         intra-chunk weights
+    h_t  = (S_tu v_u + exp(m_in - cm_t) q_t C_in) / max(|q_t n_t|, exp(-m_t))
+
+which is exactly the sequential recurrence (kernels.ref.mlstm_chunk_reference)
+re-associated — verified exact to fp32 tolerance in tests.
+
+TPU mapping: grid (batch, head-blocks, chunks), chunk axis sequential; the
+(bh, D, D) matrix memory, (bh, D) normaliser and (bh,) stabiliser are VMEM
+scratch carried across chunks. All O(T^2)/O(T D^2) contractions are
+dot_general on the MXU. Chunk default 64 keeps the (bh, D, D) state plus
+(T, T, bh) weights under ~2 MiB for D=256 heads (xlstm-350m).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, y_ref,
+                  cout_ref, nout_ref, mout_ref,
+                  c_scr, n_scr, m_scr, *, nc: int, scale: float):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)              # (T, bh, D)
+    k = k_ref[0].astype(jnp.float32) * scale      # (T, bh, D)
+    v = v_ref[0].astype(jnp.float32)              # (T, bh, D)
+    ig = i_ref[0].astype(jnp.float32)             # (T, bh)
+    fg = f_ref[0].astype(jnp.float32)             # (T, bh)
+    c_in = c_scr[...]                             # (bh, D, D)
+    n_in = n_scr[...]                             # (bh, D)
+    m_in = m_scr[:, 0]                            # (bh,)
+
+    b = jnp.cumsum(jax.nn.log_sigmoid(fg), axis=0)          # (T, bh)
+    g = ig - b                                               # (T, bh)
+    cm = jnp.maximum(jax.lax.cummax(g, axis=0), m_in[None])  # (T, bh)
+    m_t = b + cm
+
+    t = q.shape[0]
+    tt = (t, t)
+    causal = (jax.lax.broadcasted_iota(jnp.int32, tt, 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, tt, 1))
+    w = jnp.exp(g[None, :, :] - cm[:, None, :])              # (T, T, bh)
+    w = jnp.where(causal[..., None], w, 0.0)
+
+    qk = jnp.einsum("thd,uhd->tuh", q, k)                    # (T, T, bh)
+    s = qk * w
+    num = jnp.einsum("tuh,uhd->thd", s, v)
+    inter = jnp.exp(m_in[None] - cm)                         # (T, bh)
+    num += jnp.einsum("thd,hde->the", q, c_in) * inter[..., None]
+    n_vec = jnp.einsum("tuh,uhd->thd", w, k) + n_in[None] * inter[..., None]
+    den = jnp.maximum(jnp.abs(jnp.einsum("thd,thd->th", q, n_vec)),
+                      jnp.exp(-m_t))
+    y_ref[0] = (num / den[..., None]).astype(y_ref.dtype)
+
+    # chunk-end state
+    cm_last, b_last, m_last = cm[-1], b[-1], m_t[-1]         # (bh,)
+    w_out = jnp.exp(g - cm_last[None])                       # (T, bh)
+    carry = jnp.exp(b_last + m_in - m_last)                  # (bh,)
+    c_scr[...] = (c_in * carry[:, None, None]
+                  + jnp.einsum("thd,the->hde", k * w_out[..., None], v))
+    n_scr[...] = n_in * carry[:, None] + jnp.sum(k * w_out[..., None], axis=0)
+    m_scr[...] = jnp.broadcast_to(m_last[:, None], m_scr.shape)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        cout_ref[0] = c_scr[...]
+        nout_ref[0] = n_scr[...]
+        mout_ref[0] = m_scr[:, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_h", "interpret"))
+def mlstm_chunk(q: jax.Array, k: jax.Array, v: jax.Array, i_gate: jax.Array,
+                f_gate: jax.Array, *, chunk: int = 64, block_h: int = 4,
+                interpret: Optional[bool] = None):
+    """q, k, v: (B, L, H, D); i_gate, f_gate: (B, L, H) pre-activation.
+
+    Returns (y (B, L, H, D), (C (B,H,D,D), n (B,H,D), m (B,H)) final state).
+    """
+    bsz, l, h, d = q.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    t = min(chunk, l)
+    bh = min(block_h, h)
+    assert l % t == 0 and h % bh == 0, (l, t, h, bh)
+    nc, nh = l // t, h // bh
+    scale = float(1.0 / (d ** 0.5))
+
+    grid = (bsz, nh, nc)
+    spec_qkv = pl.BlockSpec((1, t, bh, d), lambda bi, hi, ci: (bi, ci, hi, 0))
+    spec_gate = pl.BlockSpec((1, t, bh), lambda bi, hi, ci: (bi, ci, hi))
+    y, c_out, n_out, m_out = pl.pallas_call(
+        functools.partial(_mlstm_kernel, nc=nc, scale=scale),
+        grid=grid,
+        in_specs=[spec_qkv, spec_qkv, spec_qkv, spec_gate, spec_gate],
+        out_specs=[
+            spec_qkv,
+            pl.BlockSpec((1, bh, d, d), lambda bi, hi, ci: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bh, d), lambda bi, hi, ci: (bi, hi, 0)),
+            pl.BlockSpec((1, bh, 1), lambda bi, hi, ci: (bi, hi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, l, h, d), q.dtype),
+            jax.ShapeDtypeStruct((bsz, h, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bh, d, d), jnp.float32),
+            pltpu.VMEM((bh, d), jnp.float32),
+            pltpu.VMEM((bh, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+        name="mlstm_chunk",
+    )(q, k, v, i_gate, f_gate)
+    return y, (c_out, n_out, m_out[..., 0])

@@ -1,0 +1,303 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU, shape/dtype sweeps in tests/test_kernels.py). They are deliberately
+simple — full-materialisation attention, sequential SSM scan — and are also
+used directly by the models when a hot-spot is too small to justify a kernel.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Full-softmax attention oracle.
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D) with Hq % Hkv == 0 (GQA).
+    When Lq != Lk the queries are aligned to the END of the key sequence
+    (decode convention: query position i corresponds to absolute position
+    Lk - Lq + i).
+    Returns (B, Hq, Lq, D) in q.dtype.
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    q_pos = jnp.arange(lq)[:, None] + (lk - lq)
+    k_pos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def attention_blockwise(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        block_q: int = 512) -> jax.Array:
+    """Memory-bounded jnp attention (the non-Pallas production path).
+
+    Identical math to attention_reference but scans over q blocks so the
+    (Lq, Lk) logits tensor is never fully materialised — required for the
+    32k/500k dry-run shapes on the CPU lowering path. For windowed
+    attention each q block only reads a static (window + block_q) k slice,
+    so HLO FLOPs scale as S*W, not S^2.
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    bq = min(block_q, lq)
+    if lq % bq:
+        return attention_reference(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale)
+    nb = lq // bq
+    q_off = lk - lq
+    # GQA here repeats K/V up to Hq heads: the repeated copies land on the
+    # model axis (Hq divides it even when Hkv does not), keeping per-block
+    # einsums local. Grouped no-repeat einsums are used ONLY in the decode
+    # path (slot-sharded caches): here they would reshape the
+    # model-sharded Hq into (Hkv, group) and break divisibility for
+    # kv<16 archs (§Perf iteration 1.3 — measured neutral on the swept
+    # cases, kept as the hazard-free form).
+    kf = jnp.repeat(k, group, axis=1) if group > 1 else k
+    vf = jnp.repeat(v, group, axis=1) if group > 1 else v
+    use_slice = window is not None and (window + bq) < lk
+    kwin = window + bq if use_slice else lk
+
+    def body(_, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * bq, bq, axis=2)
+        q_pos = qi * bq + jnp.arange(bq)[:, None] + q_off
+        if use_slice:
+            start = jnp.clip(qi * bq + q_off - window + 1, 0, lk - kwin)
+            kb = jax.lax.dynamic_slice_in_dim(kf, start, kwin, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vf, start, kwin, axis=2)
+            k_pos = start + jnp.arange(kwin)[None, :]
+        else:
+            kb, vb = kf, vf
+            k_pos = jnp.arange(kwin)[None, :]
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32)) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        mask = jnp.ones((bq, kwin), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        out = jnp.einsum("bhqk,bhkd->bhqd",
+                         jax.nn.softmax(logits, axis=-1),
+                         vb.astype(jnp.float32))
+        return None, out.astype(q.dtype)
+
+    # remat per q-block: don't keep (bq, Lk) probs of every block for bwd
+    body = jax.checkpoint(body)
+    _, blocks = jax.lax.scan(body, None, jnp.arange(nb))
+    return jnp.moveaxis(blocks, 0, 2).reshape(b, hq, lq, d)
+
+
+def lstm_cell_reference(x: jax.Array, h: jax.Array, c: jax.Array,
+                        wx: jax.Array, wh: jax.Array,
+                        b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One fused LSTM cell step (the paper's ICU workload hot-spot).
+
+    x: (B, I); h, c: (B, H); wx: (I, 4H); wh: (H, 4H); b: (4H,).
+    Gate order: input, forget, cell(g), output. Returns (h', c').
+    """
+    gates = (x.astype(jnp.float32) @ wx.astype(jnp.float32)
+             + h.astype(jnp.float32) @ wh.astype(jnp.float32)
+             + b.astype(jnp.float32))
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new.astype(h.dtype), c_new.astype(c.dtype)
+
+
+def ssm_scan_reference(x: jax.Array, dt: jax.Array, a: jax.Array,
+                       b: jax.Array, c: jax.Array, d: jax.Array,
+                       h0: Optional[jax.Array] = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Sequential Mamba2-style selective-state-space scan oracle.
+
+    x:  (B, L, H, P)   per-head inputs
+    dt: (B, L, H)      positive step sizes (already softplus'ed)
+    a:  (H,)           negative per-head decay
+    b:  (B, L, N)      input projection (single group, shared across heads)
+    c:  (B, L, N)      output projection
+    d:  (H,)           skip connection
+    h0: (B, H, P, N)   optional initial state
+    Returns y (B, L, H, P) and the final state (B, H, P, N).
+    """
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+
+    def step(state, t):
+        xt, dtt, bt, ct = t                       # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * af[None, :])        # (B, H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        state = state * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    ts = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    final, ys = jax.lax.scan(step, h0.astype(jnp.float32), ts)
+    y = jnp.moveaxis(ys, 0, 1) + xf * d.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def mlstm_chunk_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
+                    i_gate: jax.Array, f_gate: jax.Array, *,
+                    chunk: int = 256):
+    """Chunkwise-parallel mLSTM in plain jnp — the same re-association as
+    kernels.mlstm_chunk (see that module's docstring for the math), used on
+    the non-Pallas path. Scanning chunks instead of timesteps keeps the
+    saved-for-backward state O(L/chunk), which makes xLSTM training
+    lowerable at production sequence lengths.
+
+    Returns (y (B, L, H, D), (C, n, m) final state).
+    """
+    bsz, l, h, d = q.shape
+    t = min(chunk, l)
+    if l % t:
+        return mlstm_chunk_reference(q, k, v, i_gate, f_gate)
+    nc = l // t
+    scale = 1.0 / (d ** 0.5)
+
+    from repro.sharding.policy import DP, constrain
+
+    def pin(x):
+        # batch-on-dp, replicated elsewhere: without this GSPMD inherits a
+        # d_inner sharding from upstream projections and replicate-reshards
+        # at every scan step ("involuntary full rematerialization",
+        # 18.8 GB/step measured — EXPERIMENTS.md §Perf iterations 2.2-2.4)
+        return constrain(x, (DP,) + (None,) * (x.ndim - 1))
+
+    q, k, v = pin(q), pin(k), pin(v)
+    i_gate, f_gate = pin(i_gate), pin(f_gate)
+    causal = (jnp.arange(t)[:, None] >= jnp.arange(t)[None, :])
+
+    def body(state, ci):
+        # index-scan + dynamic_slice keeps the (loop-invariant) q/k/v
+        # closures batch-sharded and sliced locally — no stacked/transposed
+        # xs arrays for GSPMD to reshard (§Perf iteration 2.4)
+        c_in, n_in, m_in = state                      # (B,H,D,D),(B,H,D),(B,H)
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, ci * t, t, axis=1)
+        qc, kc, vc, ic, fc = (sl(x).astype(jnp.float32)
+                              for x in (q, k, v, i_gate, f_gate))
+        kc = kc * scale
+        b = jnp.cumsum(jax.nn.log_sigmoid(fc), axis=1)        # (B,T,H)
+        g = ic - b
+        cm = jnp.maximum(jax.lax.cummax(g, axis=1), m_in[:, None])
+        m_t = b + cm
+        w = jnp.exp(g[:, None, :, :] - cm[:, :, None, :])     # (B,T,T,H)
+        w = jnp.where(causal[None, :, :, None], w, 0.0)
+        qk = jnp.einsum("bthd,buhd->btuh", qc, kc)
+        num = jnp.einsum("btuh,buhd->bthd", qk * w, vc)
+        inter = jnp.exp(m_in[:, None] - cm)                   # (B,T,H)
+        num += jnp.einsum("bthd,bhde->bthe", qc, c_in) * inter[..., None]
+        n_vec = jnp.einsum("btuh,buhd->bthd", w, kc) \
+            + n_in[:, None] * inter[..., None]
+        den = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", qc, n_vec)),
+                          jnp.exp(-m_t))
+        y = num / den[..., None]
+
+        cm_l, b_l, m_l = cm[:, -1], b[:, -1], m_t[:, -1]      # (B,H)
+        w_out = jnp.exp(g - cm_l[:, None])                    # (B,T,H)
+        carry = jnp.exp(b_l + m_in - m_l)                     # (B,H)
+        c_new = c_in * carry[..., None, None] + jnp.einsum(
+            "bthd,bthe->bhde", kc * w_out[..., None], vc)
+        n_new = n_in * carry[..., None] + jnp.sum(
+            kc * w_out[..., None], axis=1)
+        return (c_new, n_new, m_l), y
+
+    init = (jnp.zeros((bsz, h, d, d), jnp.float32),
+            jnp.zeros((bsz, h, d), jnp.float32),
+            jnp.full((bsz, h), NEG_INF, jnp.float32))
+    state, ys = jax.lax.scan(jax.checkpoint(body), init, jnp.arange(nc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l, h, d)
+    return y.astype(q.dtype), state
+
+
+def mlstm_chunk_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                          i_gate: jax.Array, f_gate: jax.Array,
+                          c0: Optional[jax.Array] = None,
+                          n0: Optional[jax.Array] = None,
+                          m0: Optional[jax.Array] = None,
+                          ) -> tuple[jax.Array, tuple[jax.Array, jax.Array, jax.Array]]:
+    """Sequential mLSTM (xLSTM matrix-memory) oracle, stabilised gating.
+
+    q, k, v: (B, L, H, D); i_gate, f_gate: (B, L, H) raw (pre-activation).
+    State: C (B, H, D, D) matrix memory, n (B, H, D) normaliser, m (B, H) max.
+    Follows arXiv:2405.04517 eq. (19)-(27).
+    """
+    bs, l, h, d = q.shape
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    ig = i_gate.astype(jnp.float32)
+    fg = f_gate.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(d)
+    if c0 is None:
+        c0 = jnp.zeros((bs, h, d, d), jnp.float32)
+    if n0 is None:
+        n0 = jnp.zeros((bs, h, d), jnp.float32)
+    if m0 is None:
+        m0 = jnp.full((bs, h), NEG_INF, jnp.float32)
+
+    def step(state, t):
+        c, n, m = state
+        qt, kt, vt, it, ft = t
+        log_f = jax.nn.log_sigmoid(ft)            # (B, H)
+        m_new = jnp.maximum(log_f + m, it)
+        fdec = jnp.exp(log_f + m - m_new)
+        iamp = jnp.exp(it - m_new)
+        c = c * fdec[..., None, None] + iamp[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kt * scale, vt)
+        n = n * fdec[..., None] + iamp[..., None] * kt * scale
+        num = jnp.einsum("bhde,bhd->bhe", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)),
+                          jnp.exp(-m_new))
+        return (c, n, m_new), num / den[..., None]
+
+    ts = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (qf, kf, vf, ig, fg))
+    (c, n, m), ys = jax.lax.scan(step, (c0, n0, m0), ts)
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype), (c, n, m)

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower and compile every (arch x shape) on the
+production mesh, with zero real allocation (ShapeDtypeStruct stand-ins).
+
+For each combination this produces the roofline inputs (EXPERIMENTS.md
+§Dry-run / §Roofline):
+  * compiled.memory_analysis()  -> per-device bytes (proves it fits)
+  * compiled.cost_analysis()    -> HLO FLOPs / bytes accessed
+  * collective bytes            -> parsed from the post-SPMD HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute operand sizes)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --all --out experiments/dryrun
+  python -m repro.launch.dryrun --all --multi-pod        # 2x16x16 pass
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.sharding import policy
+from repro.training import optimizer, train_loop
+from repro.utils import flops as flops_util
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def variant_for_shape(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """long_500k on pure full-attention archs runs the explicit
+    sliding-window variant (DESIGN.md §4). Native-SWA / recurrent / hybrid
+    archs run unmodified."""
+    if shape.name == "long_500k" and cfg.has_quadratic_prefill:
+        return dataclasses.replace(cfg, long_context_window=4096)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.cross_attn_states, cfg.vision_dim), dt)
+        if cfg.is_encdec:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), dt)
+        return batch
+    # decode: one new token + a seq_len-deep cache
+    return {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def build_case(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               microbatches: int = 1):
+    """Returns (fn, arg_specs tuple, in_shardings tuple)."""
+    model = build_model(cfg, remat=(shape.kind == "train"))
+    p_specs = model.param_specs()
+    p_sh = policy.to_shardings(policy.param_specs(p_specs, mesh), mesh)
+    batch = input_specs(cfg, shape)
+    b_sh = policy.to_shardings(policy.batch_specs(batch, mesh), mesh)
+
+    if shape.kind == "train":
+        opt_cfg = optimizer.AdamWConfig()
+        o_specs = jax.eval_shape(optimizer.init, p_specs)
+        o_sh = policy.to_shardings(policy.param_specs(o_specs, mesh), mesh)
+        fn = train_loop.make_train_step(model, opt_cfg, jit=False,
+                                        microbatches=microbatches)
+        return fn, (p_specs, o_specs, batch), (p_sh, o_sh, b_sh)
+
+    if shape.kind == "prefill":
+        def fn(params, b):
+            return model.prefill(params, b, max_len=shape.seq_len)
+        return fn, (p_specs, batch), (p_sh, b_sh)
+
+    # decode: serve_step = one token against a seq_len cache
+    cache_specs = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    c_sh = policy.to_shardings(policy.cache_specs(cache_specs, mesh), mesh)
+    tok = batch["token"]
+    t_sh = policy.to_shardings(policy.batch_specs(tok, mesh), mesh)
+
+    def fn(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    return fn, (p_specs, tok, cache_specs), (p_sh, t_sh, c_sh)
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op in the partitioned HLO."""
+    per_op = {op: 0 for op in COLLECTIVE_OPS}
+    count = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("%") or stripped.startswith("ROOT"):
+            body = stripped.split("=", 1)
+            if len(body) != 2:
+                continue
+            rhs = body[1]
+            m = re.search(r"\b(all-gather|all-reduce|reduce-scatter|"
+                          r"all-to-all|collective-permute)(-start|-done)?\(",
+                          rhs)
+            if not m or m.group(2) == "-done":
+                continue
+            op = m.group(1)
+            shape_part = rhs[:m.start()]
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(shape_part):
+                if dt not in _DTYPE_BYTES:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+            per_op[op] += nbytes
+            count[op] += 1
+    total = sum(per_op.values())
+    return {"bytes_by_op": per_op, "count_by_op": count,
+            "total_bytes": total}
+
+
+def memory_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_bytes"] = (out.get("argument_size_in_bytes", 0)
+                              + out.get("output_size_in_bytes", 0)
+                              + out.get("temp_size_in_bytes", 0)
+                              - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+# train_4k gradient-accumulation factors: chosen so the per-device
+# activation high-water fits HBM (recorded per-case in the dry-run JSON)
+TRAIN_MICROBATCHES = {
+    "xlstm-350m": 8, "gemma2-27b": 8, "llama-3.2-vision-11b": 4,
+    "zamba2-2.7b": 8, "mixtral-8x7b": 4, "mixtral-8x22b": 8,
+    "seamless-m4t-large-v2": 2, "qwen2-1.5b": 2, "mistral-large-123b": 8,
+    "gemma-2b": 2,
+}
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, hlo_dir: str | None = None,
+             microbatches: int | None = None, moe_ep: bool = False,
+             kv_int8: bool = False):
+    cfg = variant_for_shape(get_config(arch), INPUT_SHAPES[shape_name])
+    shape = INPUT_SHAPES[shape_name]
+    if kv_int8:
+        assert shape.kind == "decode", "int8 KV is a decode-cache layout"
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if moe_ep:
+        assert cfg.num_experts and shape.kind != "train", \
+            "EP MoE is an inference layout (dp-replicated expert storage)"
+        model_axis = 16
+        assert model_axis % cfg.num_experts == 0
+        cfg = dataclasses.replace(
+            cfg, moe_ep_shards=model_axis // cfg.num_experts)
+    if microbatches is None:
+        microbatches = TRAIN_MICROBATCHES.get(arch, 1) \
+            if shape.kind == "train" else 1
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, specs, shardings = build_case(cfg, shape, mesh, microbatches)
+
+    # residual-stream sharding: sequence-sharded (Megatron SP) for
+    # attention-family archs — shrinks remat saves |model|-fold (88-layer
+    # mistral-large needs it); replicated for recurrent families, whose
+    # chunked state scans need the full sequence locally (seq-sharding
+    # forced 11.3 GB/step of L-regathers on xlstm — §Perf iteration 2.5)
+    residual = "replicated" if cfg.family in ("ssm", "hybrid") else "seq"
+    t0 = time.time()
+    with mesh, policy.activation_policy(mesh, residual=residual):
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*specs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    mem = memory_dict(compiled)
+    try:
+        cost = compiled.cost_analysis() or {}
+    except Exception:
+        cost = {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'2x16x16' if multi_pod else '16x16'}"
+        with open(os.path.join(hlo_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "step_kind": shape.kind,
+        "lower_seconds": round(t1 - t0, 2),
+        "compile_seconds": round(t2 - t1, 2),
+        "hlo_flops": float(cost.get("flops", -1.0)),
+        "hlo_bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "memory": mem,
+        "collectives": coll,
+        "param_count": flops_util.param_count(cfg),
+        "active_param_count": flops_util.active_param_count(cfg),
+        "param_bytes": flops_util.param_bytes(cfg),
+        "analytic_step_flops": flops_util.step_flops(cfg, shape),
+        "model_flops_6nd": flops_util.model_flops_6nd(cfg, shape),
+        "long_context_variant": cfg.long_context_window is not None,
+        "microbatches": microbatches,
+        "moe_ep": bool(cfg.moe_ep_shards),
+        "kv_cache_dtype": cfg.kv_cache_dtype,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} on {record['mesh']}: "
+              f"lower {record['lower_seconds']}s "
+              f"compile {record['compile_seconds']}s "
+              f"HLO_GFLOPs {record['hlo_flops']/1e9:.1f} "
+              f"collective_MB {coll['total_bytes']/1e6:.1f}")
+        if mem:
+            print(f"  memory_analysis: {json.dumps(mem)}")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="expert-parallel MoE layout (inference shapes)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+
+    cases = ([(args.arch, args.shape)] if not args.all else
+             [(a, s) for a in ARCH_NAMES for s in INPUT_SHAPES])
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cases:
+        tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}"
+        try:
+            rec = run_case(arch, shape, multi_pod=args.multi_pod,
+                           hlo_dir=args.hlo_dir, moe_ep=args.moe_ep)
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((tag, repr(e)))
+            print(f"[dryrun] FAIL {tag}: {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print(f"[dryrun] all {len(cases)} cases compiled OK")
+
+
+if __name__ == "__main__":
+    main()

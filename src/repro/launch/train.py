@@ -1,0 +1,91 @@
+"""Training launcher.
+
+On real hardware this runs the full configs on the production mesh; on this
+CPU container it runs reduced variants end-to-end (the full configs are
+exercised by launch/dryrun.py). Examples:
+
+  python -m repro.launch.train --arch qwen2-1.5b --reduced --steps 100
+  python -m repro.launch.train --arch mixtral-8x7b --reduced --steps 50 \
+      --mesh 1x1 --checkpoint-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer
+from repro.configs import ARCH_NAMES, get_config
+from repro.data.pipeline import MarkovTokenDataset, audio_stub, vision_stub
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.sharding import policy
+from repro.training import optimizer, train_loop
+
+
+def make_batches(cfg, batch, seq, seed=0):
+    ds = MarkovTokenDataset(vocab_size=cfg.vocab_size, seq_len=seq,
+                            batch_size=batch, seed=seed)
+    for b in ds.batches():
+        if cfg.family == "vlm":
+            b["vision_embeds"] = vision_stub(batch, cfg, seed)
+        if cfg.is_encdec:
+            b["frames"] = audio_stub(batch, cfg, seed)
+        yield b
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family variant (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="host",
+                    help="host | prod | prod-multipod")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(d_model=256, vocab=512)
+    mesh = {"host": make_host_mesh,
+            "prod": make_production_mesh,
+            "prod-multipod": lambda: make_production_mesh(multi_pod=True),
+            }[args.mesh]()
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = optimizer.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                    warmup_steps=min(20, args.steps // 5))
+    opt_state = optimizer.init(params)
+    step_fn = train_loop.make_train_step(model, opt_cfg,
+                                         microbatches=args.microbatches)
+
+    batches = make_batches(cfg, args.batch, args.seq)
+    t0 = time.time()
+    with mesh, policy.activation_policy(mesh):
+        for i, batch in zip(range(args.steps), batches):
+            params, opt_state, m = step_fn(params, opt_state, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss {float(m['loss']):.4f} "
+                      f"lr {float(m['lr']):.2e} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
+            if args.checkpoint_dir and args.checkpoint_every and \
+                    (i + 1) % args.checkpoint_every == 0:
+                checkpointer.save(args.checkpoint_dir, i + 1,
+                                  {"params": params})
+    if args.checkpoint_dir:
+        fn = checkpointer.save(args.checkpoint_dir, args.steps,
+                               {"params": params})
+        print("saved", fn)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Self/cross attention with GQA, RoPE, sliding-window, softcap, KV caches.
+
+Two paths:
+  * full-sequence (train / prefill): repro.kernels.ops.attention (Pallas
+    flash kernel on TPU, oracle on CPU);
+  * cached decode (1 query token): a masked GEMV in plain jnp — no kernel
+    needed, it is HBM-bandwidth-bound on the KV cache read.
+
+KV caches are either linear (length = context) or ring buffers
+(length = sliding window) — ring buffers make long_500k decode O(window)
+memory for SWA layers. Keys are stored post-RoPE so decode never re-rotates.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common
+from repro.sharding.policy import DP, TP, constrain
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype=None, cross: bool = False):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    kv_in = d  # cross-attn keys/values also read d_model-wide states
+    p = {
+        "norm": common.norm_init(d, dtype),
+        "wq": common.dense_init(ks[0], d, hq, hd, dtype=dtype),
+        "wk": common.dense_init(ks[1], kv_in, hkv, hd, dtype=dtype),
+        "wv": common.dense_init(ks[2], kv_in, hkv, hd, dtype=dtype),
+        "wo": (common.dense_init(ks[3], hq * hd, d, dtype=dtype)
+               .reshape(hq, hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    if cross:
+        p["gate_attn"] = jnp.zeros((), dtype)  # tanh-gated residual (llama-vision)
+    return p
+
+
+def _qkv(p, x, states, cfg: ModelConfig):
+    """x: (B, L, d) queries source; states: kv source (defaults to x)."""
+    kv_src = x if states is None else states
+    q = jnp.einsum("bld,dhe->bhle", x, p["wq"])
+    k = jnp.einsum("bld,dhe->bhle", kv_src, p["wk"])
+    v = jnp.einsum("bld,dhe->bhle", kv_src, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    qkv_spec = (DP, TP, None, None)     # batch on data, heads on model
+    return (constrain(q, qkv_spec), constrain(k, qkv_spec),
+            constrain(v, qkv_spec))
+
+
+def attn_full(p, x: jax.Array, cfg: ModelConfig, *,
+              window: Optional[int] = None,
+              positions: Optional[jax.Array] = None,
+              causal: bool = True,
+              cross_states: Optional[jax.Array] = None,
+              make_cache: bool = False,
+              cache_len: int = 0):
+    """Full-sequence attention. Returns (y, cache | None).
+
+    positions: (L,) absolute positions for RoPE (self-attn only).
+    """
+    h = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cross_states, cfg)
+    if cross_states is None:
+        l = x.shape[1]
+        if positions is None:
+            positions = jnp.arange(l)
+        q = common.rope(q, positions[None, None, :], cfg.rope_theta)
+        k = common.rope(k, positions[None, None, :], cfg.rope_theta)
+    y = ops.attention(q, k, v, causal=causal and cross_states is None,
+                      window=window, softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bhle,hed->bld", y, p["wo"])
+    if "gate_attn" in p:
+        y = jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(y.dtype) * y
+    out = x + y
+
+    cache = None
+    if make_cache:
+        cache = _cache_from_prefill(k, v, window, cache_len,
+                                    cfg.kv_cache_dtype)
+    return out, cache
+
+
+def _quantize(x, axis=-1):
+    """Symmetric int8 quantisation with a per-(b, h, slot) f32 scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _cache_from_prefill(k, v, window, cache_len, kv_dtype="native"):
+    """Build a decode cache from prefill K/V: (B, Hkv, L, hd) -> cache slots."""
+    b, hkv, l, hd = k.shape
+    slots = min(window, cache_len) if window else cache_len
+    kc = jnp.zeros((b, hkv, slots, hd), k.dtype)
+    vc = jnp.zeros((b, hkv, slots, hd), v.dtype)
+    if window and slots <= l:
+        # ring buffer: last `slots` tokens, placed at their pos % slots
+        tail_k, tail_v = k[:, :, l - slots:], v[:, :, l - slots:]
+        idx = (jnp.arange(l - slots, l)) % slots
+        kc = kc.at[:, :, idx].set(tail_k)
+        vc = vc.at[:, :, idx].set(tail_v)
+    else:
+        n = min(l, slots)
+        kc = jax.lax.dynamic_update_slice(kc, k[:, :, :n], (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[:, :, :n], (0, 0, 0, 0))
+    if kv_dtype == "int8":
+        kq, ks = _quantize(kc)
+        vq, vs = _quantize(vc)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return {"k": kc, "v": vc}
+
+
+def empty_cache(batch: int, cfg: ModelConfig, cache_len: int,
+                window: Optional[int], dtype) -> dict:
+    slots = min(window, cache_len) if window else cache_len
+    shape = (batch, cfg.num_kv_heads, slots, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(p, x: jax.Array, cache: dict, pos: jax.Array,
+                cfg: ModelConfig, *, window: Optional[int] = None,
+                cross: bool = False):
+    """One decode step. x: (B, 1, d); pos: scalar int32 (tokens already in
+    context). Returns (y, new_cache)."""
+    h = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    if cross:
+        # cross-attn cache is static (built at prefill): attend, don't insert
+        q = jnp.einsum("bld,dhe->bhle", h, p["wq"])
+        y = _cached_attention(q, cache["k"], cache["v"], None, None, cfg,
+                              full=True)
+    else:
+        q, k, v = _qkv(p, h, None, cfg)
+        q = common.rope(q, pos[None, None, None], cfg.rope_theta)
+        k = common.rope(k, pos[None, None, None], cfg.rope_theta)
+        slots = cache["k"].shape[2]
+        slot = jax.lax.rem(pos, slots) if window else pos
+        if "k_scale" in cache:
+            kq, ks = _quantize(k)
+            vq, vs = _quantize(v)
+            cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                  (0, 0, slot, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                  (0, 0, slot, 0)),
+                "k_scale": jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, (0, 0, slot)),
+                "v_scale": jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, (0, 0, slot)),
+            }
+        else:
+            cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, slot, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, slot, 0)),
+            }
+        y = _cached_attention(q, cache["k"], cache["v"], pos, window, cfg,
+                              full=False,
+                              k_scale=cache.get("k_scale"),
+                              v_scale=cache.get("v_scale"))
+    y = jnp.einsum("bhle,hed->bld", y, p["wo"])
+    if "gate_attn" in p:
+        y = jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(y.dtype) * y
+    return x + y, cache
+
+
+def _cached_attention(q, kc, vc, pos, window, cfg: ModelConfig, *, full,
+                      k_scale=None, v_scale=None):
+    """q: (B, Hq, 1, hd); kc/vc: (B, Hkv, S, hd). Masked GEMV decode
+    attention. GQA is expressed as grouped einsums (never jnp.repeat over
+    the kv-head axis: repeating a sharded dim forces GSPMD to all-gather
+    the whole KV cache — measured 8x1.07 GB/step on llama-vision decode,
+    EXPERIMENTS.md §Perf iteration 1.1). int8 caches carry per-(b, h, slot)
+    scales folded in AFTER the integer-weight contractions."""
+    b, hq, _, hd = q.shape
+    hkv, slots = kc.shape[1], kc.shape[2]
+    group = hq // hkv
+    compute_dtype = jnp.bfloat16 if kc.dtype == jnp.int8 else kc.dtype
+    # narrow cache reads, f32 accumulation: halves (bf16) or quarters
+    # (int8) decode HBM traffic vs an upcast cache (§Perf 1.2 / 1.4)
+    qf = q.astype(compute_dtype).reshape(b, hkv, group, hd)
+    logits = jnp.einsum("bkge,bkse->bkgs", qf, kc.astype(compute_dtype),
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    if k_scale is not None:
+        logits = logits * k_scale[:, :, None, :]
+    if cfg.attn_logit_softcap is not None:
+        logits = common.softcap(logits, cfg.attn_logit_softcap)
+    if not full:
+        slot_idx = jnp.arange(slots)
+        if window:
+            # ring buffer: valid slots are the last min(pos+1, slots) writes
+            n_valid = jnp.minimum(pos + 1, slots)
+            age = jax.lax.rem(jax.lax.rem(pos, slots) - slot_idx + slots,
+                              slots)  # 0 = newest
+            mask = age < n_valid
+        else:
+            mask = slot_idx <= pos
+        logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if v_scale is not None:
+        probs = probs * v_scale[:, :, None, :]
+    out = jnp.einsum("bkgs,bkse->bkge", probs.astype(compute_dtype),
+                     vc.astype(compute_dtype),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, 1, hd).astype(q.dtype)

@@ -1,0 +1,561 @@
+"""Block library: every block kind in configs.base.BLOCK_KINDS.
+
+Uniform interface:
+    init_block(kind, key, cfg)                      -> params pytree
+    apply_block(kind, p, x, ctx, cache, mode)       -> (x', cache', aux)
+
+mode in {"train", "prefill", "decode"}. ctx carries positions / decode pos /
+cross states / shared weights. aux is a dict of scalars (MoE load-balance).
+Caches are pytrees of arrays; `empty_block_cache` builds decode caches.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import attention, common
+from repro.sharding import policy
+
+LORA_RANK = 64  # zamba2 per-block adapters on the shared attention weights
+
+
+# =============================================================== dense / attn
+def _init_attn_mlp(key, cfg: ModelConfig, cross=False):
+    k1, k2 = jax.random.split(key)
+    return {"attn": attention.attn_init(k1, cfg, cross=cross),
+            "mlp": common.mlp_init(k2, cfg)}
+
+
+def _attn_window(kind: str, cfg: ModelConfig) -> Optional[int]:
+    if kind == base.ATTN_LOCAL:
+        return cfg.attn_window
+    if kind == base.ATTN_GLOBAL:
+        return None
+    # plain ATTN / MOE: cfg.attn_window if the arch is natively SWA (mixtral),
+    # else the explicit long-context variant window, else full.
+    return cfg.attn_window or cfg.long_context_window
+
+
+def _apply_attn_block(kind, p, x, ctx, cache, mode):
+    cfg = ctx["cfg"]
+    window = _attn_window(kind, cfg)
+    if mode == "decode":
+        x, cache_a = attention.attn_decode(p["attn"], x, cache["attn"],
+                                           ctx["pos"], cfg, window=window)
+        x = common.mlp_apply(p["mlp"], x, cfg)
+        return x, {"attn": cache_a}, {}
+    x, cache_a = attention.attn_full(
+        p["attn"], x, cfg, window=window, positions=ctx.get("positions"),
+        causal=ctx.get("causal", True), make_cache=(mode == "prefill"),
+        cache_len=ctx.get("cache_len", 0))
+    x = common.mlp_apply(p["mlp"], x, cfg)
+    cache = {"attn": cache_a} if mode == "prefill" else None
+    return x, cache, {}
+
+
+# ======================================================================== moe
+def _init_moe(key, cfg: ModelConfig):
+    ka, kr, ke = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    keys = jax.random.split(ke, 3)
+    w_gate = common.dense_init(keys[0], d, e, f, dtype=dtype).transpose(1, 0, 2)
+    w_up = common.dense_init(keys[1], d, e, f, dtype=dtype).transpose(1, 0, 2)
+    w_down = common.dense_init(keys[2], f, e, d, dtype=dtype).transpose(1, 0, 2)
+    if cfg.moe_ep_shards:
+        # EP-major storage: (E*r, d, f/r) / (E*r, f/r, d), leading dim on
+        # "model" (sharding/ep_moe.py) — zero weight movement at use
+        r = cfg.moe_ep_shards
+        fr = f // r
+        split_f = lambda w: (w.reshape(e, d, r, fr).transpose(0, 2, 1, 3)
+                             .reshape(e * r, d, fr))
+        split_f0 = lambda w: (w.reshape(e, r, fr, d).reshape(e * r, fr, d))
+        experts = {"ep_gate": split_f(w_gate), "ep_up": split_f(w_up),
+                   "ep_down": split_f0(w_down)}
+    else:
+        experts = {"w_gate": w_gate, "w_up": w_up, "w_down": w_down}
+    return {"attn": attention.attn_init(ka, cfg),
+            "moe_norm": common.norm_init(d, dtype),
+            "router": common.dense_init(kr, d, e, dtype=jnp.float32),
+            "experts": experts}
+
+
+def _moe_ffn(p, x, cfg: ModelConfig):
+    """Dropless-ish top-k MoE with per-row capacity via sort-based dispatch.
+
+    x: (B, S, d). Sort/gather dispatch (no one-hot einsums) keeps HLO FLOPs
+    ~= active-expert FLOPs x capacity_factor, so the roofline "useful ratio"
+    stays honest. All index ops are per-row => no cross-shard comms when the
+    batch is data-sharded; expert weights are TP-sharded on "model" by
+    default (EP all-to-all variant lives in sharding/ep_moe.py).
+    """
+    bsz, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    # dispatch in groups of <= 2048 tokens (GShard-style) so the (E*cap, d)
+    # expert buffer and the (E, cap, d_ff) activations stay bounded at long
+    # sequence lengths (32k-prefill TP-MoE temp: 45.7 -> ~25 GB on 8x22b)
+    g = s
+    while g > 2048:
+        if s % (g // 2):
+            break
+        g //= 2
+    # capacity >= k so single-token decode never drops an expert
+    cap = max(k, int(math.ceil(k * g / e * cfg.moe_capacity_factor)))
+
+    h = common.rms_norm(x, p["moe_norm"], cfg.norm_eps)
+    we = p["experts"]
+    if "ep_gate" in we:
+        mesh = policy.current_mesh()
+        if mesh is not None and mesh.shape.get("model", 1) == \
+                e * cfg.moe_ep_shards:
+            from repro.sharding.ep_moe import ep_moe_ffn
+            y, aux = ep_moe_ffn(we, p["router"], h, cfg, mesh)
+            return x + y.astype(x.dtype), aux
+        # no mesh (CPU tests): reconstruct the logical (E, d, f) weights
+        r = cfg.moe_ep_shards
+        fr = cfg.d_ff // r
+        we = {
+            "w_gate": we["ep_gate"].reshape(e, r, d, fr)
+            .transpose(0, 2, 1, 3).reshape(e, d, cfg.d_ff),
+            "w_up": we["ep_up"].reshape(e, r, d, fr)
+            .transpose(0, 2, 1, 3).reshape(e, d, cfg.d_ff),
+            "w_down": we["ep_down"].reshape(e, cfg.d_ff, d),
+        }
+    logits = h.astype(jnp.float32) @ p["router"]              # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                    # (B, S, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    def dispatch_group(h_row, ids_row, w_row):
+        # h_row: (g, d); ids_row/w_row: (g, k)
+        flat_e = ids_row.reshape(-1)                          # (g*k,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        # rank within expert among sorted copies
+        counts = jnp.bincount(sorted_e, length=e)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(g * k) - starts[sorted_e]
+        keep = rank < cap
+        slot = jnp.where(keep, sorted_e * cap + rank, e * cap)  # drop bucket
+        tok = order // k
+        buf = jnp.zeros((e * cap + 1, d), h_row.dtype)
+        buf = buf.at[slot].add(h_row[tok] * keep[:, None].astype(h_row.dtype))
+        buf = buf[:-1].reshape(e, cap, d)
+        act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, we["w_gate"]))
+        out = act * jnp.einsum("ecd,edf->ecf", buf, we["w_up"])
+        out = jnp.einsum("ecf,efd->ecd", out, we["w_down"])
+        out_flat = out.reshape(e * cap, d)
+        w_sorted = w_row.reshape(-1)[order]
+        contrib = (out_flat[jnp.where(keep, slot, 0)]
+                   * (w_sorted * keep).astype(out_flat.dtype)[:, None])
+        y = jnp.zeros((g, d), out_flat.dtype).at[tok].add(contrib)
+        return y
+
+    rows = bsz * s // g
+    hr = h.reshape(rows, g, d)
+    er = top_e.reshape(rows, g, k)
+    wr = top_w.reshape(rows, g, k)
+    chunk = 8
+    if rows > chunk and rows % chunk == 0:
+        # sequential map over row-chunks: a flat vmap materialises EVERY
+        # row's (E*cap, d)/(E, cap, d_ff) buffers at once (38-46 GB/chip
+        # at 32k prefill); lax.map bounds the live set to one chunk, and
+        # remat keeps the bwd from saving per-chunk intermediates
+        body = jax.checkpoint(
+            lambda args: jax.vmap(dispatch_group)(*args))
+        y = jax.lax.map(body, (hr.reshape(rows // chunk, chunk, g, d),
+                               er.reshape(rows // chunk, chunk, g, k),
+                               wr.reshape(rows // chunk, chunk, g, k)))
+        y = y.reshape(bsz, s, d)
+    else:
+        y = jax.vmap(dispatch_group)(hr, er, wr).reshape(bsz, s, d)
+    # load-balance aux (Switch-style): E * sum_e f_e * P_e
+    frac = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_p)
+    return x + y.astype(x.dtype), aux
+
+
+def _apply_moe_block(p, x, ctx, cache, mode):
+    cfg = ctx["cfg"]
+    window = _attn_window(base.MOE, cfg)
+    if mode == "decode":
+        x, cache_a = attention.attn_decode(p["attn"], x, cache["attn"],
+                                           ctx["pos"], cfg, window=window)
+    else:
+        x, cache_a = attention.attn_full(
+            p["attn"], x, cfg, window=window, positions=ctx.get("positions"),
+            make_cache=(mode == "prefill"), cache_len=ctx.get("cache_len", 0))
+    x, aux = _moe_ffn(p, x, cfg)
+    cache = {"attn": cache_a} if mode in ("prefill", "decode") else None
+    return x, cache, {"moe_aux": aux}
+
+
+# ===================================================================== mamba2
+def _init_mamba(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    h, n = cfg.ssm_num_heads, cfg.ssm_state_dim
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": common.norm_init(d, dtype),
+        "w_in": common.dense_init(ks[0], d, 2 * d_inner + 2 * n + h,
+                                  dtype=dtype),
+        "conv": common.causal_conv_init(ks[1], conv_dim, cfg.ssm_conv_width,
+                                        dtype=dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),     # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_gate": common.norm_init(d_inner, dtype),
+        "w_out": common.dense_init(ks[3], d_inner, d, dtype=dtype),
+    }
+
+
+def _mamba_split(p, cfg, zxbcdt):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n, h = cfg.ssm_state_dim, cfg.ssm_num_heads
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * n]
+    dt_raw = zxbcdt[..., -h:]
+    return z, xbc, dt_raw
+
+
+def _apply_mamba(p, x, ctx, cache, mode):
+    cfg = ctx["cfg"]
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n, h = cfg.ssm_state_dim, cfg.ssm_num_heads
+    ph = cfg.ssm_head_dim
+    bsz, l, _ = x.shape
+
+    hid = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    z, xbc, dt_raw = _mamba_split(p, cfg, hid @ p["w_in"])
+    conv_state = cache["conv"] if mode == "decode" else None
+    xbc, conv_state = common.causal_conv_apply(p["conv"], xbc, conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner].reshape(bsz, l, h, ph)
+    b_mat = xbc[..., d_inner:d_inner + n]
+    c_mat = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    if mode == "decode":
+        # single-step recurrence
+        state = cache["ssm"]                                   # (B, H, P, N)
+        dt1 = dt[:, 0]                                         # (B, H)
+        decay = jnp.exp(dt1 * a[None])                         # (B, H)
+        upd = jnp.einsum("bhp,bn->bhpn",
+                         xs[:, 0].astype(jnp.float32) * dt1[..., None],
+                         b_mat[:, 0].astype(jnp.float32))
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state,
+                       c_mat[:, 0].astype(jnp.float32))
+        y = y + xs[:, 0].astype(jnp.float32) * p["d_skip"][None, :, None]
+        y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+        new_cache = {"conv": conv_state, "ssm": state}
+    else:
+        y, final_state = ops.ssm(xs, dt, a, b_mat, c_mat, p["d_skip"],
+                                 chunk=cfg.ssm_chunk)
+        y = y.reshape(bsz, l, d_inner)
+        new_cache = ({"conv": conv_state, "ssm": final_state}
+                     if mode == "prefill" else None)
+
+    y = y * jax.nn.silu(z)
+    y = common.rms_norm(y, p["norm_gate"], cfg.norm_eps)
+    return x + y @ p["w_out"], new_cache, {}
+
+
+# ============================================================== shared attn
+def _init_shared_lora(key, cfg: ModelConfig):
+    """Per-group LoRA adapters over the shared attention block (zamba2)."""
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "lora_a": common.dense_init(k1, d, LORA_RANK, dtype=dtype),
+        "lora_b": jnp.zeros((LORA_RANK, d), dtype),
+    }
+
+
+def _apply_shared_attn(lora_p, x, ctx, cache, mode):
+    """Shared full-attention block (one weight set reused across groups),
+    specialised per group by a LoRA residual on the block input."""
+    cfg = ctx["cfg"]
+    shared = ctx["shared_attn"]
+    x = x + (x @ lora_p["lora_a"]) @ lora_p["lora_b"]
+    window = cfg.long_context_window  # zamba2 shared attn is full by default
+    if mode == "decode":
+        x, cache_a = attention.attn_decode(shared["attn"], x, cache["attn"],
+                                           ctx["pos"], cfg, window=window)
+        x = common.mlp_apply(shared["mlp"], x, cfg)
+        return x, {"attn": cache_a}, {}
+    x, cache_a = attention.attn_full(
+        shared["attn"], x, cfg, window=window,
+        positions=ctx.get("positions"), make_cache=(mode == "prefill"),
+        cache_len=ctx.get("cache_len", 0))
+    x = common.mlp_apply(shared["mlp"], x, cfg)
+    return x, ({"attn": cache_a} if mode == "prefill" else None), {}
+
+
+# ================================================================ cross attn
+def _apply_cross(p, x, ctx, cache, mode):
+    cfg = ctx["cfg"]
+    if mode == "decode":
+        x, _ = attention.attn_decode(p["attn"], x, cache["attn"], ctx["pos"],
+                                     cfg, cross=True)
+        x = common.mlp_apply(p["mlp"], x, cfg)
+        return x, cache, {}
+    x, cache_a = attention.attn_full(
+        p["attn"], x, cfg, cross_states=ctx["cross_states"],
+        make_cache=False)
+    if mode == "prefill":
+        # cross KV depends only on the (static) cross states: build once
+        states = ctx["cross_states"]
+        k = jnp.einsum("bld,dhe->bhle", states, p["attn"]["wk"])
+        v = jnp.einsum("bld,dhe->bhle", states, p["attn"]["wv"])
+        cache_a = {"k": k, "v": v}
+    x = common.mlp_apply(p["mlp"], x, cfg)
+    return x, ({"attn": cache_a} if mode == "prefill" else None), {}
+
+
+# ====================================================================== xLSTM
+def _init_mlstm(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    h = cfg.ssm_num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": common.norm_init(d, dtype),
+        "w_up": common.dense_init(ks[0], d, 2 * d_inner, dtype=dtype),
+        "conv": common.causal_conv_init(ks[1], d_inner, cfg.ssm_conv_width,
+                                        dtype=dtype),
+        "wq": common.dense_init(ks[2], d_inner, d_inner, dtype=dtype),
+        "wk": common.dense_init(ks[3], d_inner, d_inner, dtype=dtype),
+        "wv": common.dense_init(ks[4], d_inner, d_inner, dtype=dtype),
+        "w_gates": common.dense_init(ks[5], d_inner, 2 * h, dtype=jnp.float32),
+        "gate_bias": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "norm_out": common.norm_init(d_inner, dtype),
+        "w_down": common.dense_init(ks[6], d_inner, d, dtype=dtype),
+    }
+
+
+def _apply_mlstm(p, x, ctx, cache, mode):
+    cfg = ctx["cfg"]
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.ssm_num_heads
+    ph = d_inner // h
+    bsz, l, _ = x.shape
+
+    hid = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    up = hid @ p["w_up"]
+    xin, z = up[..., :d_inner], up[..., d_inner:]
+    conv_state = cache["conv"] if mode == "decode" else None
+    cx, conv_state = common.causal_conv_apply(p["conv"], xin, conv_state)
+    cx = jax.nn.silu(cx)
+    # cell inputs are dp-sharded on batch, replicated elsewhere (the mLSTM
+    # matrix memory is computed locally per batch shard — §Perf iter 2.3)
+    bld = (policy.DP, None, None)
+    q = policy.constrain((cx @ p["wq"]), bld).reshape(bsz, l, h, ph)
+    k = policy.constrain((cx @ p["wk"]), bld).reshape(bsz, l, h, ph)
+    v = policy.constrain((xin @ p["wv"]), bld).reshape(bsz, l, h, ph)
+    gates = policy.constrain(
+        cx.astype(jnp.float32) @ p["w_gates"], bld) + p["gate_bias"]
+    ig, fg = gates[..., :h], gates[..., h:]
+
+    if mode == "decode":
+        c0, n0, m0 = cache["c"], cache["n"], cache["m"]
+        scale = 1.0 / math.sqrt(ph)
+        qt = q[:, 0].astype(jnp.float32)
+        kt = k[:, 0].astype(jnp.float32) * scale
+        vt = v[:, 0].astype(jnp.float32)
+        it, ft = ig[:, 0], fg[:, 0]
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m0, it)
+        fdec = jnp.exp(log_f + m0 - m_new)
+        iamp = jnp.exp(it - m_new)
+        c = c0 * fdec[..., None, None] + iamp[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kt, vt)
+        nvec = n0 * fdec[..., None] + iamp[..., None] * kt
+        num = jnp.einsum("bhde,bhd->bhe", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", nvec, qt)),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None]).reshape(bsz, 1, d_inner).astype(x.dtype)
+        new_cache = {"conv": conv_state, "c": c, "n": nvec, "m": m_new}
+    else:
+        y, (c, nvec, m) = ops.mlstm(q, k, v, ig, fg, chunk=cfg.ssm_chunk
+                                    if cfg.ssm_chunk <= 64 else 64)
+        y = y.reshape(bsz, l, d_inner)
+        new_cache = ({"conv": conv_state, "c": c, "n": nvec, "m": m}
+                     if mode == "prefill" else None)
+
+    y = y * jax.nn.silu(z)
+    y = common.rms_norm(y, p["norm_out"], cfg.norm_eps)
+    return x + y @ p["w_down"], new_cache, {}
+
+
+def _init_slstm(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    h = cfg.num_heads
+    ph = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": common.norm_init(d, dtype),
+        "conv": common.causal_conv_init(ks[0], d, cfg.ssm_conv_width,
+                                        dtype=dtype),
+        "w_gates": common.dense_init(ks[1], d, 4 * d, dtype=dtype),
+        "r_gates": (jax.random.normal(ks[2], (4, h, ph, ph), jnp.float32)
+                    / math.sqrt(ph)).astype(dtype),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]),
+        "norm_out": common.norm_init(d, dtype),
+        "w_up": common.dense_init(ks[3], d, 2 * cfg.d_model, dtype=dtype),
+        "w_down": common.dense_init(jax.random.fold_in(ks[3], 1),
+                                    cfg.d_model, d, dtype=dtype),
+    }
+
+
+def _slstm_step(p, cfg, xg_t, state):
+    """xg_t: (B, 4d) input gate preactivations; state: (h, c, n, m)."""
+    h_prev, c_prev, n_prev, m_prev = state
+    d = cfg.d_model
+    nh = cfg.num_heads
+    ph = d // nh
+    bsz = xg_t.shape[0]
+    hp = h_prev.reshape(bsz, nh, ph)
+    rec = jnp.einsum("bhp,ghpq->bghq", hp,
+                     p["r_gates"].astype(jnp.float32)).reshape(bsz, 4 * d)
+    g = xg_t + rec + p["gate_bias"]
+    zt = jnp.tanh(g[..., 0:d])
+    it = g[..., d:2 * d]
+    ft = g[..., 2 * d:3 * d]
+    ot = jax.nn.sigmoid(g[..., 3 * d:])
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m_prev, it)
+    i_act = jnp.exp(it - m_new)
+    f_act = jnp.exp(log_f + m_prev - m_new)
+    c_new = f_act * c_prev + i_act * zt
+    n_new = f_act * n_prev + i_act
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def _apply_slstm(p, x, ctx, cache, mode):
+    cfg = ctx["cfg"]
+    d = cfg.d_model
+    bsz, l, _ = x.shape
+    hid = common.rms_norm(x, p["norm"], cfg.norm_eps)
+    conv_state = cache["conv"] if mode == "decode" else None
+    cx, conv_state = common.causal_conv_apply(p["conv"], hid, conv_state)
+    cx = jax.nn.silu(cx)
+    xg = (cx @ p["w_gates"]).astype(jnp.float32)               # (B, L, 4d)
+
+    if mode == "decode":
+        state = (cache["h"], cache["c"], cache["n"], cache["m"])
+        state = _slstm_step(p, cfg, xg[:, 0], state)
+        y = state[0][:, None, :]
+        new_cache = {"conv": conv_state, "h": state[0], "c": state[1],
+                     "n": state[2], "m": state[3]}
+    else:
+        init = tuple(jnp.zeros((bsz, d), jnp.float32) for _ in range(3)) + (
+            jnp.full((bsz, d), -1e30, jnp.float32),)
+
+        def step(s, xt):
+            s = _slstm_step(p, cfg, xt, s)
+            return s, s[0]
+
+        state, ys = jax.lax.scan(step, init, jnp.moveaxis(xg, 1, 0))
+        y = jnp.moveaxis(ys, 0, 1)
+        new_cache = ({"conv": conv_state, "h": state[0], "c": state[1],
+                      "n": state[2], "m": state[3]}
+                     if mode == "prefill" else None)
+
+    y = common.rms_norm(y.astype(x.dtype), p["norm_out"], cfg.norm_eps)
+    up = y @ p["w_up"]
+    half = cfg.d_model
+    y = jax.nn.gelu(up[..., :half]) * up[..., half:]
+    return x + y @ p["w_down"], new_cache, {}
+
+
+# ================================================================= dispatch
+_INIT = {
+    base.ATTN: _init_attn_mlp,
+    base.ATTN_LOCAL: _init_attn_mlp,
+    base.ATTN_GLOBAL: _init_attn_mlp,
+    base.MOE: _init_moe,
+    base.MAMBA: _init_mamba,
+    base.SHARED_ATTN: _init_shared_lora,
+    base.CROSS: lambda k, c: _init_attn_mlp(k, c, cross=True),
+    base.SLSTM: _init_slstm,
+    base.MLSTM: _init_mlstm,
+}
+
+
+def init_block(kind: str, key, cfg: ModelConfig):
+    return _INIT[kind](key, cfg)
+
+
+def apply_block(kind: str, p, x, ctx, cache, mode: str):
+    if kind in (base.ATTN, base.ATTN_LOCAL, base.ATTN_GLOBAL):
+        return _apply_attn_block(kind, p, x, ctx, cache, mode)
+    if kind == base.MOE:
+        return _apply_moe_block(p, x, ctx, cache, mode)
+    if kind == base.MAMBA:
+        return _apply_mamba(p, x, ctx, cache, mode)
+    if kind == base.SHARED_ATTN:
+        return _apply_shared_attn(p, x, ctx, cache, mode)
+    if kind == base.CROSS:
+        return _apply_cross(p, x, ctx, cache, mode)
+    if kind == base.SLSTM:
+        return _apply_slstm(p, x, ctx, cache, mode)
+    if kind == base.MLSTM:
+        return _apply_mlstm(p, x, ctx, cache, mode)
+    raise ValueError(kind)
+
+
+def empty_block_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype) -> dict:
+    """Zero decode cache for one block."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    if kind in (base.ATTN, base.ATTN_LOCAL, base.ATTN_GLOBAL, base.MOE,
+                base.SHARED_ATTN):
+        window = _attn_window(kind, cfg)
+        if kind == base.SHARED_ATTN:
+            window = cfg.long_context_window
+        return {"attn": attention.empty_cache(batch, cfg, cache_len, window,
+                                              dtype)}
+    if kind == base.CROSS:
+        shape = (batch, cfg.num_kv_heads, cfg.cross_attn_states, cfg.head_dim)
+        return {"attn": {"k": jnp.zeros(shape, dtype),
+                         "v": jnp.zeros(shape, dtype)}}
+    if kind == base.MAMBA:
+        n, h, ph = cfg.ssm_state_dim, cfg.ssm_num_heads, cfg.ssm_head_dim
+        conv_dim = d_inner + 2 * n
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim),
+                                  dtype),
+                "ssm": jnp.zeros((batch, h, ph, n), jnp.float32)}
+    if kind == base.MLSTM:
+        h = cfg.ssm_num_heads
+        ph = d_inner // h
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner),
+                                  dtype),
+                "c": jnp.zeros((batch, h, ph, ph), jnp.float32),
+                "n": jnp.zeros((batch, h, ph), jnp.float32),
+                "m": jnp.full((batch, h), -1e30, jnp.float32)}
+    if kind == base.SLSTM:
+        d = cfg.d_model
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d), dtype),
+                "h": jnp.zeros((batch, d), jnp.float32),
+                "c": jnp.zeros((batch, d), jnp.float32),
+                "n": jnp.zeros((batch, d), jnp.float32),
+                "m": jnp.full((batch, d), -1e30, jnp.float32)}
+    raise ValueError(kind)

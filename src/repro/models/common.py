@@ -1,0 +1,111 @@
+"""Shared building blocks: norms, RoPE, MLPs, causal conv, init helpers.
+
+All models are plain pytrees of jnp arrays + pure apply functions (no flax).
+Param leaf names are load-bearing: sharding/sharding.py assigns
+PartitionSpecs by matching (path, shape) rules.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, in_dim: int, *out_dims: int, dtype=jnp.float32):
+    shape = (in_dim, *out_dims)
+    std = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            * (1.0 / math.sqrt(dim))).astype(dtype)
+
+
+# ---------------------------------------------------------------------- norm
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def norm_init(dim: int, dtype=jnp.float32):
+    # stored as (gamma - 1): zeros init, gemma convention (1 + g)
+    return jnp.zeros((dim,), dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, D) with D even; positions: broadcastable to (..., L)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq       # (..., L, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- mlp
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm": norm_init(cfg.d_model, dtype),
+         "w_up": dense_init(k2, cfg.d_model, d_ff, dtype=dtype),
+         "w_down": dense_init(k3, d_ff, cfg.d_model, dtype=dtype)}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(k1, cfg.d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = h @ p["w_up"]
+    if cfg.mlp_type == "swiglu":
+        up = jax.nn.silu(h @ p["w_gate"]) * up
+    elif cfg.mlp_type == "geglu":
+        up = jax.nn.gelu(h @ p["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return x + up @ p["w_down"]
+
+
+# --------------------------------------------------------------- causal conv
+def causal_conv_init(key, channels: int, width: int, dtype=jnp.float32):
+    return {"w": (jax.random.normal(key, (width, channels), jnp.float32)
+                  / math.sqrt(width)).astype(dtype),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv_apply(p, x: jax.Array, state: Optional[jax.Array] = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B, L, C); state: (B, width-1, C) history.
+
+    Returns (y, new_state). With state=None a zero history is used.
+    """
+    w, b = p["w"], p["b"]
+    width = w.shape[0]
+    bsz, l, c = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, L+width-1, C)
+    y = jnp.zeros((bsz, l, c), jnp.float32)
+    for i in range(width):                            # width is tiny (4)
+        y = y + xp[:, i:i + l].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, l:]                             # last width-1 inputs
+    return y.astype(x.dtype), new_state
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

@@ -1,0 +1,292 @@
+"""Decoder-only model: embeddings + scanned block-group stack + LM head.
+
+Layer stacking uses jax.lax.scan over *groups* (one group = one copy of
+cfg.group_pattern, params stacked on a leading num_groups axis). This keeps
+the HLO O(len(group_pattern)) instead of O(num_layers) — an 88-layer
+mistral-large compiles as one scanned body.
+
+Supports every decoder-ish family in the pool: dense (llama/qwen/gemma/
+gemma2/mistral), MoE (mixtral), SSM (xLSTM), hybrid (zamba2, with shared
+attention weights passed around the scan as a closure), VLM (llama-vision,
+cross-attending to stub patch embeddings through a learned projector).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.configs.base import ModelConfig
+from repro.models import blocks, common
+from repro.sharding.policy import DP, TP, constrain, constrain_residual
+
+AUX_KEYS = ("moe_aux",)
+VOCAB_PAD_MULTIPLE = 256   # Megatron-style: pad embeddings so the vocab dim
+                           # shards evenly on the "model" axis
+
+
+def padded_vocab(vocab_size: int) -> int:
+    m = VOCAB_PAD_MULTIPLE
+    return ((vocab_size + m - 1) // m) * m
+
+
+def _mask_vocab_pad(logits, vocab_size: int):
+    """-inf the padding logits (additive, keeps the sharded padded shape)."""
+    vpad = logits.shape[-1]
+    if vpad == vocab_size:
+        return logits
+    pad_mask = jnp.arange(vpad) >= vocab_size
+    return logits + jnp.where(pad_mask, -1e30, 0.0).astype(logits.dtype)
+
+
+def chunked_nll(head_fn, x, labels, weights, chunk: int):
+    """Mean next-token NLL without materialising full-vocab logits.
+
+    head_fn: (B, T, d) -> (B, T, V) f32 logits. x: (B, S, d);
+    labels, weights: (B, S). Scans the head over S in `chunk`-token slices
+    (S stays un-sliced so production seq lengths divide evenly; positions
+    with weight 0 are ignored).
+    """
+    bsz, s, _ = x.shape
+    denom = jnp.maximum(jnp.sum(weights), 1.0)
+    if s % chunk or s <= chunk:
+        return -_nll_sum(head_fn(x), labels, weights) / denom
+    n = s // chunk
+    xc = x.reshape(bsz, n, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(bsz, n, chunk).transpose(1, 0, 2)
+    wc = weights.reshape(bsz, n, chunk).transpose(1, 0, 2)
+
+    def body(acc, args):
+        xs, ls, ws = args
+        return acc + _nll_sum(head_fn(xs), ls, ws), None
+
+    # remat: recompute each chunk's logits in bwd instead of saving them
+    body = jax.checkpoint(body)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc, wc))
+    return -total / denom
+
+
+def _nll_sum(logits, labels, weights):
+    """weighted sum of log p(labels), vocab-sharding-friendly (no gather
+    over the sharded vocab dim: one-hot contraction + explicit logsumexp)."""
+    logits = constrain(logits, (DP, None, TP))
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    tgt = jnp.sum(logits * onehot, axis=-1)
+    return jnp.sum((tgt - lse) * weights)
+
+
+def _pad_aux(aux: dict) -> dict:
+    return {k: aux.get(k, jnp.zeros((), jnp.float32)) for k in AUX_KEYS}
+
+
+class TransformerStack:
+    """Scanned stack of block groups. Shared-weight blocks (zamba2) are
+    initialised once and routed through ctx rather than the scan xs."""
+
+    def __init__(self, cfg: ModelConfig,
+                 pattern: Optional[tuple] = None,
+                 num_groups: Optional[int] = None,
+                 remat: bool = False):
+        self.cfg = cfg
+        self.pattern = pattern or cfg.group_pattern
+        self.num_groups = num_groups or cfg.num_groups
+        self.has_shared = base.SHARED_ATTN in self.pattern
+        self.remat = remat
+
+    def init(self, key):
+        cfg = self.cfg
+        k_groups, k_shared = jax.random.split(key)
+
+        def init_group(k):
+            ks = jax.random.split(k, len(self.pattern))
+            return {f"b{i}_{kind}": blocks.init_block(kind, ks[i], cfg)
+                    for i, kind in enumerate(self.pattern)}
+
+        p = {"groups": jax.vmap(init_group)(
+            jax.random.split(k_groups, self.num_groups))}
+        if self.has_shared:
+            p["shared"] = blocks._init_attn_mlp(k_shared, cfg)
+        return p
+
+    def apply(self, p, x, ctx, caches=None, mode="train"):
+        """caches: stacked per-group cache pytree (decode) or None.
+
+        Returns (x, caches_out | None, aux dict)."""
+        ctx = dict(ctx)
+        if self.has_shared:
+            ctx["shared_attn"] = p["shared"]
+        collect_cache = mode in ("prefill", "decode")
+
+        def body(carry, xs):
+            x = carry
+            gp, gcache = xs if collect_cache else (xs, None)
+            caches_out, aux_sum = {}, {k: jnp.zeros((), jnp.float32)
+                                       for k in AUX_KEYS}
+            for i, kind in enumerate(self.pattern):
+                c_in = gcache[f"b{i}_{kind}"] if gcache is not None else None
+                x, c_out, aux = blocks.apply_block(kind, gp[f"b{i}_{kind}"],
+                                                   x, ctx,
+                                                   c_in, mode)
+                aux = _pad_aux(aux)
+                aux_sum = {k: aux_sum[k] + aux[k] for k in AUX_KEYS}
+                if collect_cache:
+                    caches_out[f"b{i}_{kind}"] = c_out
+            x = constrain_residual(x)
+            ys = (caches_out, aux_sum) if collect_cache else aux_sum
+            return x, ys
+
+        if self.remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        if collect_cache:
+            if mode == "prefill":
+                # caches are produced by the blocks; feed groups only
+                def body_prefill(carry, gp):
+                    return body(carry, (gp, None))
+                x, (caches_out, auxs) = jax.lax.scan(body_prefill, x,
+                                                     p["groups"])
+            else:
+                x, (caches_out, auxs) = jax.lax.scan(body, x,
+                                                     (p["groups"], caches))
+        else:
+            x, auxs = jax.lax.scan(body, x, p["groups"])
+            caches_out = None
+        aux = {k: jnp.sum(auxs[k]) for k in AUX_KEYS}
+        return x, caches_out, aux
+
+    def empty_caches(self, batch: int, cache_len: int, dtype):
+        one = {f"b{i}_{kind}": blocks.empty_block_cache(kind, self.cfg,
+                                                        batch,
+                                                 cache_len, dtype)
+               for i, kind in enumerate(self.pattern)}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.num_groups,) + a.shape), one)
+
+    def prefill_cache_len(self):
+        raise NotImplementedError
+
+
+class DecoderModel:
+    """tokens (+ optional vision embeddings) -> logits, with KV/state caches.
+
+    batch dict keys: "tokens" (B, L) int32; vlm additionally
+    "vision_embeds" (B, S_v, vision_dim).
+    """
+
+    def __init__(self, cfg: ModelConfig, remat: bool = False):
+        self.cfg = cfg
+        self.stack = TransformerStack(cfg, remat=remat)
+
+    # ------------------------------------------------------------- params
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 4)
+        vpad = padded_vocab(cfg.vocab_size)
+        p = {"embed": common.embed_init(ks[0], vpad, cfg.d_model, dtype),
+             "final_norm": common.norm_init(cfg.d_model, dtype),
+             "stack": self.stack.init(ks[1])}
+        if not cfg.tie_embeddings:
+            p["unembed"] = common.dense_init(ks[2], cfg.d_model, vpad,
+                                             dtype=dtype)
+        if cfg.family == "vlm":
+            p["vision_proj"] = common.dense_init(ks[3], cfg.vision_dim,
+                                                 cfg.d_model, dtype=dtype)
+        return p
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -------------------------------------------------------------- pieces
+    def _embed(self, p, tokens):
+        x = jnp.take(p["embed"], tokens, axis=0)
+        x = constrain_residual(x)
+        return x * jnp.asarray(math.sqrt(self.cfg.d_model), x.dtype)
+
+    def _head(self, p, x):
+        cfg = self.cfg
+        x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+        w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+        logits = (x @ w).astype(jnp.float32)
+        if cfg.final_logit_softcap is not None:
+            logits = common.softcap(logits, cfg.final_logit_softcap)
+        return _mask_vocab_pad(logits, cfg.vocab_size)
+
+    def _cross_states(self, p, batch):
+        if self.cfg.family != "vlm":
+            return None
+        ve = batch["vision_embeds"]
+        return ve @ p["vision_proj"]
+
+    def _ctx(self, p, batch, cache_len=0):
+        return {"cfg": self.cfg, "causal": True,
+                "cross_states": self._cross_states(p, batch),
+                "cache_len": cache_len}
+
+    # ---------------------------------------------------------------- api
+    def forward(self, p, batch):
+        """Full-sequence forward (training). Returns (logits, aux)."""
+        x = self._embed(p, batch["tokens"])
+        x, _, aux = self.stack.apply(p["stack"], x, self._ctx(p, batch),
+                                     mode="train")
+        return self._head(p, x), aux
+
+    def loss(self, p, batch, *, loss_chunk: int = 512):
+        """Next-token cross-entropy (+ MoE load-balance aux).
+
+        The LM-head matmul + log_softmax are evaluated in sequence chunks
+        so the (B, S, V) f32 logits tensor is never materialised — at
+        production shapes (S=4k, V=256k) that tensor would dominate HBM.
+        """
+        tokens = batch["tokens"]
+        x = self._embed(p, tokens)
+        x, _, aux = self.stack.apply(p["stack"], x, self._ctx(p, batch),
+                                     mode="train")
+        # predict token t+1 at position t; the last position is masked so
+        # the sequence dim stays power-of-two for the chunked head scan
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        weights = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], jnp.float32),
+             jnp.zeros((tokens.shape[0], 1), jnp.float32)], axis=1)
+        loss = chunked_nll(lambda h: self._head(p, h), x, labels, weights,
+                           loss_chunk)
+        if self.cfg.num_experts:
+            loss = loss + 0.01 * aux["moe_aux"] / max(1, self.cfg.num_layers)
+        return loss
+
+    def prefill(self, p, batch, max_len: Optional[int] = None):
+        """Returns (last-token logits (B, V), cache).
+
+        max_len: total context budget (prompt + decode steps); defaults to
+        the prompt length (no decode growth room)."""
+        tokens = batch["tokens"]
+        cache_len = max_len or tokens.shape[1]
+        x = self._embed(p, tokens)
+        ctx = self._ctx(p, batch, cache_len=cache_len)
+        x, caches, _ = self.stack.apply(p["stack"], x, ctx, mode="prefill")
+        logits = self._head(p, x[:, -1:])[:, 0]
+        cache = {"pos": jnp.asarray(tokens.shape[1], jnp.int32),
+                 "groups": caches}
+        return logits, cache
+
+    def decode_step(self, p, token, cache):
+        """token: (B,) int32; returns (logits (B, V), cache)."""
+        x = self._embed(p, token[:, None])
+        ctx = {"cfg": self.cfg, "causal": True, "pos": cache["pos"],
+               "cross_states": None}
+        x, caches, _ = self.stack.apply(p["stack"], x, ctx,
+                                        caches=cache["groups"], mode="decode")
+        logits = self._head(p, x)[:, 0]
+        return logits, {"pos": cache["pos"] + 1, "groups": caches}
+
+    def init_cache(self, batch: int, cache_len: int):
+        """Zero decode cache (for dry-runs and fresh decode sessions)."""
+        dtype = jnp.dtype(self.cfg.dtype)
+        return {"pos": jnp.asarray(0, jnp.int32),
+                "groups": self.stack.empty_caches(batch, cache_len, dtype)}

@@ -1,0 +1,118 @@
+"""Encoder-decoder model (seamless-m4t family).
+
+Per the assignment carve-out the speech frontend is a stub — the encoder
+consumes precomputed frame embeddings (B, frames, d_model). The decoder is
+a standard causal stack where every layer is (self-attn, cross-attn, MLP);
+we express that as a TransformerStack with pattern (ATTN, CROSS) scanned
+num_layers times, cross-attending to the encoder output.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.decoder import TransformerStack, padded_vocab
+
+
+class EncDecModel:
+    """batch keys: "tokens" (B, L) int32 targets, "frames" (B, F, d_model)
+    stub-encoder frame embeddings."""
+
+    def __init__(self, cfg: ModelConfig, remat: bool = False):
+        assert cfg.is_encdec
+        self.cfg = cfg
+        self.encoder = TransformerStack(cfg, pattern=(base.ATTN,),
+                                        num_groups=cfg.encoder_layers,
+                                        remat=remat)
+        self.decoder = TransformerStack(cfg, pattern=(base.ATTN, base.CROSS),
+                                        num_groups=cfg.num_layers,
+                                        remat=remat)
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 5)
+        vpad = padded_vocab(cfg.vocab_size)
+        p = {"embed": common.embed_init(ks[0], vpad, cfg.d_model, dtype),
+             "enc_norm": common.norm_init(cfg.d_model, dtype),
+             "final_norm": common.norm_init(cfg.d_model, dtype),
+             "encoder": self.encoder.init(ks[1]),
+             "decoder": self.decoder.init(ks[2])}
+        if not cfg.tie_embeddings:
+            p["unembed"] = common.dense_init(ks[3], cfg.d_model, vpad,
+                                             dtype=dtype)
+        return p
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def encode(self, p, frames):
+        ctx = {"cfg": self.cfg, "causal": False, "cross_states": None}
+        x, _, _ = self.encoder.apply(p["encoder"], frames, ctx, mode="train")
+        return common.rms_norm(x, p["enc_norm"], self.cfg.norm_eps)
+
+    def _embed(self, p, tokens):
+        x = jnp.take(p["embed"], tokens, axis=0)
+        return x * jnp.asarray(math.sqrt(self.cfg.d_model), x.dtype)
+
+    def _head(self, p, x):
+        cfg = self.cfg
+        x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+        w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+        from repro.models.decoder import _mask_vocab_pad
+        return _mask_vocab_pad((x @ w).astype(jnp.float32), cfg.vocab_size)
+
+    def forward(self, p, batch):
+        enc = self.encode(p, batch["frames"])
+        x = self._embed(p, batch["tokens"])
+        ctx = {"cfg": self.cfg, "causal": True, "cross_states": enc}
+        x, _, aux = self.decoder.apply(p["decoder"], x, ctx, mode="train")
+        return self._head(p, x), aux
+
+    def loss(self, p, batch, *, loss_chunk: int = 512):
+        from repro.models.decoder import chunked_nll
+        enc = self.encode(p, batch["frames"])
+        tokens = batch["tokens"]
+        x = self._embed(p, tokens)
+        ctx = {"cfg": self.cfg, "causal": True, "cross_states": enc}
+        x, _, _ = self.decoder.apply(p["decoder"], x, ctx, mode="train")
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        weights = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], jnp.float32),
+             jnp.zeros((tokens.shape[0], 1), jnp.float32)], axis=1)
+        return chunked_nll(lambda h: self._head(p, h), x, labels, weights,
+                           loss_chunk)
+
+    def prefill(self, p, batch, max_len=None):
+        enc = self.encode(p, batch["frames"])
+        tokens = batch["tokens"]
+        cache_len = max_len or tokens.shape[1]
+        x = self._embed(p, tokens)
+        ctx = {"cfg": self.cfg, "causal": True, "cross_states": enc,
+               "cache_len": cache_len}
+        x, caches, _ = self.decoder.apply(p["decoder"], x, ctx,
+                                          mode="prefill")
+        logits = self._head(p, x[:, -1:])[:, 0]
+        return logits, {"pos": jnp.asarray(tokens.shape[1], jnp.int32),
+                        "groups": caches}
+
+    def decode_step(self, p, token, cache):
+        x = self._embed(p, token[:, None])
+        ctx = {"cfg": self.cfg, "causal": True, "pos": cache["pos"],
+               "cross_states": None}
+        x, caches, _ = self.decoder.apply(p["decoder"], x, ctx,
+                                          caches=cache["groups"],
+                                          mode="decode")
+        logits = self._head(p, x)[:, 0]
+        return logits, {"pos": cache["pos"] + 1, "groups": caches}
+
+    def init_cache(self, batch: int, cache_len: int):
+        dtype = jnp.dtype(self.cfg.dtype)
+        return {"pos": jnp.asarray(0, jnp.int32),
+                "groups": self.decoder.empty_caches(batch, cache_len, dtype)}

@@ -1,0 +1,72 @@
+"""The paper's ICU LSTM workloads (Edge AIBench, Table IV).
+
+LSTM classifier over clinical time series: (B, T, features) -> class logits.
+The per-step cell is the Pallas fused kernel (kernels.ops.lstm_step) scanned
+over time — the exact compute the paper's allocator places on a tier.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.icu_lstm import ICULSTMConfig
+from repro.kernels import ops
+from repro.models import common
+
+
+class ICULSTM:
+    def __init__(self, cfg: ICULSTMConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        layers = []
+        k_head = key
+        in_dim = cfg.input_dim
+        for i in range(cfg.depth):
+            k_head, kx, kh = jax.random.split(k_head, 3)
+            layers.append({
+                "wx": common.dense_init(kx, in_dim, 4, cfg.hidden),
+                "wh": common.dense_init(kh, cfg.hidden, 4, cfg.hidden),
+                "b": jnp.zeros((4, cfg.hidden)),
+            })
+            in_dim = cfg.hidden
+        k_head, kw = jax.random.split(k_head)
+        return {"layers": layers,
+                "head": common.dense_init(kw, cfg.hidden, cfg.num_classes),
+                "head_b": jnp.zeros((cfg.num_classes,))}
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def forward(self, p, x):
+        """x: (B, T, input_dim) -> logits (B, num_classes)."""
+        cfg = self.cfg
+        bsz = x.shape[0]
+        h_seq = x
+        for layer in p["layers"]:
+            h0 = jnp.zeros((bsz, cfg.hidden), x.dtype)
+            c0 = jnp.zeros((bsz, cfg.hidden), x.dtype)
+
+            def step(carry, xt, layer=layer):
+                h, c = carry
+                h, c = ops.lstm_step(xt, h, c, layer["wx"], layer["wh"],
+                                     layer["b"])
+                return (h, c), h
+
+            (h, _), hs = jax.lax.scan(step, (h0, c0),
+                                      jnp.moveaxis(h_seq, 1, 0))
+            h_seq = jnp.moveaxis(hs, 0, 1)
+        return h @ p["head"] + p["head_b"]
+
+    def loss(self, p, batch):
+        logits = self.forward(p, batch["features"])
+        labels = batch["labels"]
+        if self.cfg.num_classes == 2 and labels.ndim == 1:
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, labels[:, None],
+                                                 axis=-1))
+        # multi-label (phenotype): sigmoid BCE over num_classes
+        z = logits.astype(jnp.float32)
+        y = labels.astype(jnp.float32)
+        return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))

@@ -1,0 +1,12 @@
+"""build_model(cfg): uniform entry point for every assigned architecture."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.decoder import DecoderModel
+from repro.models.encdec import EncDecModel
+
+
+def build_model(cfg: ModelConfig, remat: bool = False):
+    if cfg.is_encdec:
+        return EncDecModel(cfg, remat=remat)
+    return DecoderModel(cfg, remat=remat)

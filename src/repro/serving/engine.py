@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill once, decode autoregressively.
+
+The engine is tier-agnostic compute; tier *placement* of requests is the
+paper's contribution and lives in core/ (launch/serve.py glues them: the
+scheduler decides which tier's engine a request batch runs on).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jax.Array            # (B, prompt + steps)
+    prefill_seconds: float
+    decode_seconds: float
+
+    @property
+    def total_seconds(self):
+        return self.prefill_seconds + self.decode_seconds
+
+
+class ServingEngine:
+    def __init__(self, model, params):
+        self.model = model
+        self.params = params
+        self._prefill = jax.jit(model.prefill,
+                                static_argnames=("max_len",))
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, batch: dict, steps: int, *,
+                 greedy: bool = True, rng: Optional[jax.Array] = None,
+                 max_len: Optional[int] = None) -> GenerationResult:
+        prompt = batch["tokens"]
+        bsz, plen = prompt.shape
+        max_len = max_len or plen + steps
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch, max_len=max_len)
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+
+        out = [prompt]
+        tok = self._sample(logits, greedy, rng, 0)
+        for i in range(steps):
+            out.append(tok[:, None])
+            if i == steps - 1:
+                break
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = self._sample(logits, greedy, rng, i + 1)
+        jax.block_until_ready(out[-1])
+        t2 = time.perf_counter()
+        return GenerationResult(tokens=jnp.concatenate(out, axis=1),
+                                prefill_seconds=t1 - t0,
+                                decode_seconds=t2 - t1)
+
+    @staticmethod
+    def _sample(logits, greedy, rng, i):
+        if greedy or rng is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(jax.random.fold_in(rng, i),
+                                      logits).astype(jnp.int32)
+
+
+class ClassifierEngine:
+    """Single-shot inference engine for the paper's ICU LSTM classifiers."""
+
+    def __init__(self, model, params):
+        self.model = model
+        self.params = params
+        self._forward = jax.jit(model.forward)
+
+    def infer(self, features: jax.Array):
+        t0 = time.perf_counter()
+        logits = self._forward(self.params, features)
+        logits.block_until_ready()
+        return logits, time.perf_counter() - t0

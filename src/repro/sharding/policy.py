@@ -1,0 +1,285 @@
+"""FSDP x TP sharding policy over the ("pod",) "data", "model" mesh.
+
+Two mechanisms, both production-standard:
+
+1. **Name-aware parameter rules** (Megatron-style): every param leaf name in
+   the model zoo has an explicit PartitionSpec — qkv column-parallel on
+   heads, output projections row-parallel, d_ff column/row pairs, vocab-
+   parallel embeddings, expert-stacked MoE weights TP on d_ff, FSDP
+   (("pod","data") or ("data",)) on the matching input dim. Divisibility is
+   checked per dim (qwen2's 12 heads fall back to head_dim; seamless'
+   256206 vocab falls back to replicated-vocab), so nothing relies on
+   GSPMD padding. Optimizer state mirrors the param tree and inherits the
+   same specs by leaf name.
+
+2. **Activation constraints**: models call ``constrain(x, (DP, None, TP))``
+   at block boundaries / qkv / logits. Under an active
+   ``activation_policy`` (set by launch code) this lowers to
+   ``with_sharding_constraint``; with no policy active it is an identity —
+   CPU unit tests never see a mesh. Without these constraints GSPMD is
+   free to propagate weight shardings into activations (e.g. head_dim on
+   the data axis), which replicated the batch in early dry-runs — see
+   EXPERIMENTS.md §Perf for the before/after.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP = "dp"   # logical data-parallel axes (("pod","data") or ("data",))
+TP = "tp"   # logical tensor-parallel axis ("model")
+
+_policy = threading.local()
+
+
+def fsdp_axes(mesh_axis_names) -> tuple:
+    return (("pod", "data") if "pod" in mesh_axis_names else ("data",))
+
+
+class activation_policy:
+    """Context manager enabling activation sharding constraints.
+
+    residual: "seq" shards the block-boundary residual stream on the
+    sequence dim over the model axis (Megatron sequence parallelism — the
+    remat-saved per-layer residuals shrink by |model|, which is what lets
+    the 88-layer mistral-large fit HBM); "replicated" keeps it model-
+    replicated (§Perf compares the two)."""
+
+    def __init__(self, mesh: Mesh, residual: str = "seq"):
+        self.dp = fsdp_axes(mesh.axis_names)
+        self.tp = ("model",) if "model" in mesh.axis_names else ()
+        self.dp_size = int(np.prod([mesh.shape[a] for a in self.dp]))
+        self.tp_size = int(np.prod([mesh.shape[a] for a in self.tp])) \
+            if self.tp else 1
+        assert residual in ("seq", "replicated")
+        self.residual = residual
+        self.mesh = mesh
+
+    def __enter__(self):
+        _policy.current = self
+        return self
+
+    def __exit__(self, *exc):
+        _policy.current = None
+
+
+def constrain(x, spec: Sequence):
+    """spec entries: None | DP | TP. Dims that don't divide are dropped."""
+    pol = getattr(_policy, "current", None)
+    if pol is None:
+        return x
+    parts = []
+    for dim, s in zip(x.shape, spec):
+        if s == DP and dim % pol.dp_size == 0 and dim >= pol.dp_size:
+            parts.append(pol.dp if len(pol.dp) > 1 else pol.dp[0])
+        elif s == TP and pol.tp and dim % pol.tp_size == 0 \
+                and dim >= pol.tp_size:
+            parts.append(pol.tp[0])
+        else:
+            parts.append(None)
+    parts += [None] * (len(x.shape) - len(parts))
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def current_mesh():
+    pol = getattr(_policy, "current", None)
+    return None if pol is None else pol.mesh
+
+
+def constrain_residual(x):
+    """Block-boundary residual stream (B, S, d)."""
+    pol = getattr(_policy, "current", None)
+    if pol is None:
+        return x
+    spec = (DP, TP, None) if pol.residual == "seq" else (DP, None, None)
+    return constrain(x, spec)
+
+
+# ------------------------------------------------------------- param rules
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0 and n >= k
+
+
+def _param_rule(name: str, shape, model: int, fsdp: int, dp_axes):
+    """PartitionSpec for one (unstacked) param leaf by name."""
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    nd = len(shape)
+
+    def d(i):  # dp if divisible
+        return dp if _div(shape[i], fsdp) else None
+
+    def m(i):  # model if divisible
+        return "model" if _div(shape[i], model) else None
+
+    if nd <= 1:
+        return P()
+    if name in ("wq", "wk", "wv"):
+        if nd == 2:                           # xLSTM: (d_inner, d_inner)
+            return P(d(0), m(1))
+        if m(1):                              # (d, H, hd) column-parallel
+            return P(d(0), "model", None)
+        return P(d(0), None, m(2))
+    if name == "wo":                          # (H, hd, d) row-parallel
+        if m(0):
+            return P("model", None, d(2))
+        return P(None, m(1), d(2))
+    if name in ("bq", "bk", "bv"):            # (H, hd) follow qkv
+        return P("model", None) if m(0) else P(None, m(1))
+    if name in ("w_up", "w_gate", "w_in", "w_gates"):   # (d, out) column
+        return P(d(0), m(1))
+    if name == "w_down" or name == "w_out":   # (in, d) row-parallel
+        return P(m(0), d(1))
+    if name == "embed":                       # (V, d) vocab-parallel
+        return P(m(0), d(1))
+    if name == "unembed":                     # (d, V)
+        return P(d(0), m(1))
+    if name == "router":
+        return P()
+    if name == "lora_a":
+        return P(d(0), None)
+    if name == "lora_b":
+        return P(None, d(1))
+    if name == "vision_proj":                 # (vision_dim, d)
+        return P(d(0), m(1))
+    if name in ("wx", "wh"):                  # ICU LSTM (I, 4, H): tiny
+        return P()
+    if name.startswith("ep_"):                # EP-major experts (E*r, d, f/r)
+        # leading dim on "model" (one expert slice per shard);
+        # dp-replicated by design — inference layout (sharding/ep_moe.py)
+        return P("model" if _div(shape[0], model) else None, None, None)
+    # fallback: model on last divisible dim, fsdp on first
+    spec = [None] * nd
+    for i in range(nd - 1, 0, -1):
+        if _div(shape[i], model):
+            spec[i] = "model"
+            break
+    if spec[0] is None and _div(shape[0], fsdp):
+        spec[0] = dp
+    return P(*spec)
+
+
+def _expert_rule(name: str, shape, model: int, fsdp: int, dp_axes):
+    """Stacked MoE expert weights (E, d, f) / (E, f, d): TP on d_ff."""
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    if name.startswith("ep_"):   # EP-major (E*r, d, f/r): expert on model
+        return P("model" if _div(shape[0], model) else None, None, None)
+    if name in ("w_up", "w_gate"):
+        return P(None, dp if _div(shape[1], fsdp) else None,
+                 "model" if _div(shape[2], model) else None)
+    if name == "w_down":
+        return P(None, "model" if _div(shape[1], model) else None,
+                 dp if _div(shape[2], fsdp) else None)
+    return P()
+
+
+def _mesh_sizes(mesh: Mesh):
+    dp_axes = fsdp_axes(mesh.axis_names)
+    fsdp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    model = mesh.shape.get("model", 1)
+    return model, fsdp, dp_axes
+
+
+def param_specs(tree, mesh: Mesh):
+    model, fsdp, dp_axes = _mesh_sizes(mesh)
+
+    def one(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = keys[-1] if keys else ""
+        stacked = "groups" in keys
+        in_experts = "experts" in keys
+        # xLSTM cell blocks: dp-only (no TP) — the matrix-memory cell needs
+        # d_inner replicated; column-parallel w_up forced 18.8 GB/step of
+        # per-chunk regathers on a 350M model (§Perf iteration 2.1). The
+        # model axis still serves the (dominant) vocab-parallel embedding.
+        dp_only = any(k.endswith(("_mlstm", "_slstm")) for k in keys)
+        eff_model = 1 << 62 if dp_only else model
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if len(shape) <= 1:
+            return P()
+        if in_experts:
+            spec = _expert_rule(name, shape, model, fsdp, dp_axes)
+        else:
+            spec = _param_rule(name, shape, eff_model, fsdp, dp_axes)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def cache_specs(tree, mesh: Mesh):
+    """Decode caches: KV (G, B, Hkv, S, hd) — batch on dp when divisible,
+    else sequence/slots on dp (context parallel for batch-1 long decode);
+    kv-heads on model when divisible, else head_dim, else slots."""
+    model, fsdp, dp_axes = _mesh_sizes(mesh)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def one(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = keys[-1] if keys else ""
+        stacked = "groups" in keys
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if nd >= 2:
+            used_dp = False
+            if _div(shape[0], fsdp):            # batch
+                spec[0] = dp
+                used_dp = True
+            if name in ("k_scale", "v_scale") and nd == 3:  # (B, Hkv, S)
+                if _div(shape[1], model):
+                    spec[1] = "model"
+                elif _div(shape[2], model):
+                    spec[2] = "model"
+            elif name in ("k", "v") and nd == 4:  # (B, Hkv, S, hd)
+                # kv-heads on model when divisible; else SLOTS on model
+                # (flash-decode style: attention contractions stay local,
+                # softmax reduces are tiny) — never head_dim, which is the
+                # qk contraction dim and forces full-cache gathers
+                # (EXPERIMENTS.md §Perf iteration 1.2)
+                if _div(shape[1], model):
+                    spec[1] = "model"
+                elif _div(shape[2], model):
+                    spec[2] = "model"
+                if not used_dp and _div(shape[2], fsdp) and spec[2] is None:
+                    spec[2] = dp                # context-parallel slots
+            else:
+                # recurrent states: model on the largest remaining dim
+                order = sorted(range(1, nd), key=lambda i: -shape[i])
+                for i in order:
+                    if _div(shape[i], model):
+                        spec[i] = "model"
+                        break
+                if not used_dp:
+                    for i in order:
+                        if spec[i] is None and _div(shape[i], fsdp):
+                            spec[i] = dp
+                            break
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_specs(tree, mesh: Mesh):
+    """Model inputs: batch on dp when divisible, rest replicated."""
+    _, fsdp, dp_axes = _mesh_sizes(mesh)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def one(leaf):
+        if not leaf.shape:
+            return P()
+        first = dp if _div(leaf.shape[0], fsdp) else None
+        return P(first, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(one, tree)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

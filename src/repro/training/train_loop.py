@@ -1,0 +1,76 @@
+"""Training step factory: loss -> grads -> AdamW, one jittable function.
+
+``make_train_step(model, opt_cfg)`` returns
+``step(params, opt_state, batch) -> (params, opt_state, metrics)`` — the
+function launch/dryrun.py lowers for train_4k and launch/train.py runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import optimizer
+
+
+def make_train_step(model, opt_cfg: optimizer.AdamWConfig, jit=True,
+                    microbatches: int = 1):
+    """microbatches > 1 enables gradient accumulation: the global batch is
+    split on its leading dim and scanned, dividing the activation
+    high-water by the microbatch count (grads accumulate in f32 with the
+    params' sharding)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss)(params, batch)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape(microbatches, a.shape[0] // microbatches,
+                                    *a.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+
+            def body(carry, b):
+                acc, lsum = carry
+                loss, g = grads_of(params, b)
+                acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32),
+                                   acc, g)
+                return (acc, lsum + loss), None
+
+            (grads, lsum), _ = jax.lax.scan(body, (zero, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = lsum / microbatches
+        params, opt_state, stats = optimizer.update(opt_cfg, grads,
+                                                    opt_state, params)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1)) if jit else step
+
+
+def make_eval_step(model, jit=True):
+    def step(params, batch):
+        return model.loss(params, batch)
+    return jax.jit(step) if jit else step
+
+
+def train(model, params, batches, *, steps: int,
+          opt_cfg: optimizer.AdamWConfig | None = None, log_every: int = 10,
+          log_fn=print):
+    """Simple host-loop trainer used by examples and smoke tests."""
+    opt_cfg = opt_cfg or optimizer.AdamWConfig(total_steps=steps)
+    opt_state = optimizer.init(params)
+    step_fn = make_train_step(model, opt_cfg)
+    history = []
+    for i, batch in zip(range(steps), batches):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            loss = float(metrics["loss"])
+            history.append((i, loss))
+            log_fn(f"step {i:5d} loss {loss:.4f} "
+                   f"gnorm {float(metrics['grad_norm']):.3f}")
+    return params, opt_state, history

@@ -1,0 +1,19 @@
+"""Tiny property-sweep helper (hypothesis is not installed in this offline
+container — DESIGN.md §6). Runs a check over seeded random cases and
+reports every failing seed."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sweep(check, n_cases: int = 20, seed: int = 0):
+    """check(rng) raises AssertionError on property violation."""
+    failures = []
+    for i in range(n_cases):
+        rng = np.random.default_rng(seed + i)
+        try:
+            check(rng)
+        except AssertionError as e:
+            failures.append((seed + i, str(e)))
+    assert not failures, f"{len(failures)}/{n_cases} cases failed: " \
+                         f"{failures[:3]}"

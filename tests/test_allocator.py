@@ -1,0 +1,73 @@
+"""Algorithm 1 (single-job allocation) + cost model tests."""
+import numpy as np
+import pytest
+
+from prop import sweep
+from repro.core import allocator
+from repro.core.cost_model import (AnalyticCostModel, CalibratedCostModel,
+                                   Job, RooflineCostModel, Workload)
+from repro.core.tiers import CC, ED, ES, TierSpec, paper_tiers, tpu_tiers
+
+
+def test_allocation_is_argmin():
+    def check(rng):
+        cm = AnalyticCostModel(paper_tiers(), lam1=1.0,
+                               lam2=float(rng.uniform(1e5, 1e8)))
+        wl = Workload("w", comp=float(rng.uniform(1e3, 1e6)),
+                      unit_bytes=float(rng.uniform(1e3, 1e5)))
+        job = Job(wl, size=float(rng.integers(1, 2048)))
+        a = allocator.allocate_single(cm, job)
+        per = a.per_tier_response
+        assert abs(a.response - min(per.values())) < 1e-12
+        assert per[a.tier] == min(per.values())
+    sweep(check, n_cases=25)
+
+
+def test_small_models_prefer_device_large_prefer_upper_tiers():
+    """The paper's Section VIII observation: light models + slow network ->
+    compute near the user; heavy compute -> offload up."""
+    cm = AnalyticCostModel(paper_tiers(), lam2=1.0)
+    light = Job(Workload("light", comp=1e4, unit_bytes=1e4), size=100)
+    assert allocator.allocate_single(cm, light).tier == ED
+    # heavy compute, tiny payload: cloud's 4.4x FLOPS advantage wins
+    heavy = Job(Workload("heavy", comp=1e10, unit_bytes=10.0), size=100)
+    assert allocator.allocate_single(cm, heavy).tier == CC
+
+
+def test_response_monotone_in_size():
+    cm = AnalyticCostModel(paper_tiers())
+    wl = Workload("w", comp=1e5, unit_bytes=1e4)
+    prev = -1.0
+    for size in (1, 4, 16, 64, 256):
+        t = allocator.allocate_single(cm, Job(wl, size=size)).response
+        assert t >= prev
+        prev = t
+
+
+def test_calibrated_model_reproduces_measurements():
+    tiers = paper_tiers()
+    meas = {("w", CC): (10.0, 20.0, 2.0), ("w", ES): (12.0, 4.0, 2.0),
+            ("w", ED): (30.0, 0.0, 2.0)}
+    cm = CalibratedCostModel.from_measurements(tiers, meas)
+    job = Job(Workload("w", comp=1, unit_bytes=1), size=4.0)
+    assert cm.processing_time(CC, job) == pytest.approx(20.0)
+    assert cm.transmission_time(ES, job) == pytest.approx(8.0)
+    assert cm.transmission_time(ED, job) == 0.0
+
+
+def test_roofline_cost_model_memory_bound_decode():
+    """A memory-bound decode job must cost max(compute, memory), and the
+    FLOPS-only model must under-estimate it — the beyond-paper fix."""
+    tiers = tpu_tiers()
+    wl = Workload("decode", comp=2e9, unit_bytes=10.0, hbm_bytes=3e9)
+    job = Job(wl, size=1.0)
+    roof = RooflineCostModel(tiers)
+    paper = AnalyticCostModel(tiers)
+    t = roof.processing_time(ED, job)
+    assert t == pytest.approx(3e9 / tiers[ED].hbm_bw)
+    assert paper.processing_time(ED, job) < t
+
+
+def test_tier_efficiency_derate():
+    t = TierSpec("x", flops=100.0, efficiency=0.5)
+    assert t.effective_flops == 50.0

@@ -1,0 +1,80 @@
+"""Dry-run machinery tests.
+
+The full 40-combination sweep is executed by ``python -m
+repro.launch.dryrun --all`` (EXPERIMENTS.md §Dry-run); here we check the
+machinery itself: the 512-device env bootstrap, the mesh builders, the
+collective-bytes HLO parser, and one real (small-arch) lower+compile in a
+subprocess (device count must be set before jax initialises, so the main
+pytest process — which sees 1 CPU — can't do it inline)."""
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, timeout=560):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", code], check=True,
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+def test_production_mesh_shapes_in_subprocess():
+    out = run_py(
+        "import os;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512';"
+        "from repro.launch.mesh import make_production_mesh;"
+        "m1=make_production_mesh();m2=make_production_mesh(multi_pod=True);"
+        "print(dict(m1.shape), dict(m2.shape))")
+    assert "{'data': 16, 'model': 16}" in out.stdout
+    assert "{'pod': 2, 'data': 16, 'model': 16}" in out.stdout
+
+
+def test_single_case_dryrun_subprocess():
+    """qwen2-1.5b decode_32k: fastest-compiling real case (~3 s)."""
+    out = run_py(
+        "from repro.launch.dryrun import run_case;"
+        "import json;"
+        "r=run_case('qwen2-1.5b','decode_32k',verbose=False);"
+        "print(json.dumps({k:r[k] for k in ('arch','shape','mesh','devices',"
+        "'hlo_flops')}));"
+        "assert r['collectives']['total_bytes']>0;"
+        "assert r['memory'].get('temp_size_in_bytes',0)>0")
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["devices"] == 256 and rec["mesh"] == "16x16"
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[4,4]{1,0} all-reduce(%y), to_apply=%add
+  ROOT %t = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-to-all(%a, %b)
+  %done = f32[4]{0} all-reduce-done(%start)
+"""
+    got = collective_bytes(hlo)
+    assert got["bytes_by_op"]["all-gather"] == 8 * 128 * 2
+    assert got["bytes_by_op"]["all-reduce"] == 64
+    assert got["bytes_by_op"]["all-to-all"] == 32
+    assert got["count_by_op"]["all-to-all"] == 1
+
+
+def test_variant_for_shape_rules():
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch.dryrun import variant_for_shape
+    long = INPUT_SHAPES["long_500k"]
+    # pure full-attention dense arch gets the explicit window variant
+    v = variant_for_shape(get_config("qwen2-1.5b"), long)
+    assert v.long_context_window == 4096
+    # native-SWA / recurrent archs run unmodified
+    assert variant_for_shape(get_config("mixtral-8x7b"),
+                             long).long_context_window is None
+    assert variant_for_shape(get_config("xlstm-350m"),
+                             long).long_context_window is None
+    # non-long shapes never modified
+    assert variant_for_shape(get_config("qwen2-1.5b"),
+                             INPUT_SHAPES["train_4k"]) \
+        == get_config("qwen2-1.5b")

@@ -1,0 +1,62 @@
+"""FLOP/param accounting vs published model sizes + paper formulas."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.icu_lstm import ICU_WORKLOADS
+from repro.utils import flops
+
+# published parameter counts (model cards); ours include the vocab padding
+PUBLISHED = {
+    "gemma2-27b": 27.2e9,
+    "mixtral-8x7b": 46.7e9,
+    "mixtral-8x22b": 141e9,
+    "mistral-large-123b": 123e9,
+    "qwen2-1.5b": 1.54e9,
+    "gemma-2b": 2.5e9,
+}
+
+
+@pytest.mark.parametrize("arch,want", sorted(PUBLISHED.items()))
+def test_param_count_matches_model_card(arch, want):
+    got = flops.param_count(get_config(arch))
+    assert abs(got - want) / want < 0.05, (arch, got, want)
+
+
+def test_mixtral_active_params():
+    cfg = get_config("mixtral-8x7b")
+    active = flops.active_param_count(cfg)
+    assert abs(active - 12.9e9) / 12.9e9 < 0.05
+
+
+def test_train_flops_approx_6nd():
+    """Dense train FLOPs should be within ~2x of 6*N*D (attention extra)."""
+    cfg = get_config("qwen2-1.5b")
+    shape = INPUT_SHAPES["train_4k"]
+    got = flops.step_flops(cfg, shape)
+    nd6 = flops.model_flops_6nd(cfg, shape)
+    assert 0.8 < got / nd6 < 2.0, (got, nd6)
+
+
+def test_decode_flops_scale_with_context():
+    cfg = get_config("mistral-large-123b")
+    f1 = flops.forward_flops(cfg, 1, 4096, "decode")
+    f2 = flops.forward_flops(cfg, 1, 32768, "decode")
+    assert f2 > f1                       # KV read term grows
+    assert f2 < f1 * 2                   # but matmuls dominate at 123B
+
+
+def test_recurrent_decode_flops_context_independent():
+    cfg = get_config("xlstm-350m")
+    f1 = flops.forward_flops(cfg, 1, 4096, "decode")
+    f2 = flops.forward_flops(cfg, 1, 524288, "decode")
+    assert f1 == f2
+
+
+def test_paper_lstm_flops_formula():
+    """Section III.C: FLOPs = (2I-1)O per FC layer, summed over gates."""
+    got = flops.lstm_flops(input_dim=76, hidden=16)
+    assert got == (2 * 76 - 1) * 64 + (2 * 16 - 1) * 64
+    # paper Table IV magnitudes are plausible under this formula
+    for wl in ICU_WORKLOADS:
+        est = flops.lstm_flops(wl.input_dim, wl.hidden)
+        assert 0.05 < est / wl.paper_flops < 20.0

@@ -1,0 +1,151 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes.
+
+Pallas kernels run in interpret mode on CPU (TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lstm_cell import lstm_cell
+from repro.kernels.mlstm_chunk import mlstm_chunk
+from repro.kernels.ssm_scan import ssm_scan
+
+
+ATTN_CASES = [
+    # b, hq, hkv, lq, lk, d, causal, window, softcap
+    (2, 4, 2, 256, 256, 64, True, None, None),
+    (1, 8, 1, 128, 128, 128, True, None, 50.0),     # MQA + softcap (gemma)
+    (2, 4, 4, 256, 256, 64, True, 128, None),       # sliding window
+    (1, 4, 2, 128, 512, 64, True, None, None),      # chunked prefill tail
+    (1, 2, 2, 1, 256, 64, True, None, None),        # single-token decode
+    (2, 2, 2, 128, 128, 32, False, None, None),     # bidirectional (encoder)
+    (1, 4, 4, 256, 256, 64, True, 64, 30.0),        # window + softcap
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES, ids=str)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(case, dtype):
+    b, hq, hkv, lq, lk, d, causal, window, softcap = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, hq, lq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, lk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, lk, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, interpret=True)
+    want = ref.attention_reference(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    assert out.dtype == q.dtype
+
+
+def test_attention_blockwise_matches_reference():
+    for window in (None, 96):
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        q = jax.random.normal(ks[0], (2, 4, 1024, 32))
+        k = jax.random.normal(ks[1], (2, 2, 1024, 32))
+        v = jax.random.normal(ks[2], (2, 2, 1024, 32))
+        out = ref.attention_blockwise(q, k, v, causal=True, window=window,
+                                      block_q=256)
+        want = ref.attention_reference(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(4, 76, 16), (128, 64, 128), (8, 17, 8),
+                                   (32, 130, 256)], ids=str)
+def test_lstm_cell_matches_oracle(shape):
+    b, i_dim, h_dim = shape
+    ks = jax.random.split(jax.random.PRNGKey(b), 6)
+    x = jax.random.normal(ks[0], (b, i_dim))
+    h = jax.random.normal(ks[1], (b, h_dim))
+    c = jax.random.normal(ks[2], (b, h_dim))
+    wx = jax.random.normal(ks[3], (i_dim, 4, h_dim)) * 0.1
+    wh = jax.random.normal(ks[4], (h_dim, 4, h_dim)) * 0.1
+    bias = jax.random.normal(ks[5], (4, h_dim)) * 0.1
+    h2, c2 = lstm_cell(x, h, c, wx, wh, bias, block_b=64, block_h=64,
+                       interpret=True)
+    hr, cr = ref.lstm_cell_reference(
+        x, h, c, wx.reshape(i_dim, 4 * h_dim), wh.reshape(h_dim, 4 * h_dim),
+        bias.reshape(4 * h_dim))
+    np.testing.assert_allclose(h2, hr, atol=1e-5)
+    np.testing.assert_allclose(c2, cr, atol=1e-5)
+
+
+SSM_CASES = [(2, 128, 4, 16, 16, 32, 2), (1, 256, 8, 32, 64, 64, 4),
+             (2, 64, 2, 8, 16, 64, 2)]
+
+
+@pytest.mark.parametrize("case", SSM_CASES, ids=str)
+def test_ssm_scan_matches_oracle(case):
+    b, l, h, p, n, chunk, bh = case
+    ks = jax.random.split(jax.random.PRNGKey(sum(case)), 6)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bm = jax.random.normal(ks[3], (b, l, n))
+    cm = jax.random.normal(ks[4], (b, l, n))
+    d = jax.random.normal(ks[5], (h,))
+    y, hf = ssm_scan(x, dt, a, bm, cm, d, chunk=chunk, block_h=bh,
+                     interpret=True)
+    yr, hr = ref.ssm_scan_reference(x, dt, a, bm, cm, d)
+    np.testing.assert_allclose(y, yr, atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(hf, hr, atol=3e-4, rtol=3e-4)
+
+
+MLSTM_CASES = [(2, 128, 4, 32, 32, 2), (1, 64, 2, 64, 16, 1),
+               (2, 256, 4, 16, 64, 4)]
+
+
+@pytest.mark.parametrize("case", MLSTM_CASES, ids=str)
+def test_mlstm_chunk_matches_oracle(case):
+    b, l, h, d, chunk, bh = case
+    ks = jax.random.split(jax.random.PRNGKey(sum(case)), 5)
+    q = jax.random.normal(ks[0], (b, l, h, d))
+    k = jax.random.normal(ks[1], (b, l, h, d))
+    v = jax.random.normal(ks[2], (b, l, h, d))
+    ig = jax.random.normal(ks[3], (b, l, h))
+    fg = jax.random.normal(ks[4], (b, l, h)) + 2.0
+    y, (c, n, m) = mlstm_chunk(q, k, v, ig, fg, chunk=chunk, block_h=bh,
+                               interpret=True)
+    yr, (cr, nr, mr) = ref.mlstm_chunk_reference(q, k, v, ig, fg)
+    np.testing.assert_allclose(y, yr, atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(c, cr, atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(m, mr, atol=1e-5)
+
+
+def test_mlstm_chunk_jnp_matches_sequential():
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    q, k, v = (jax.random.normal(ks[i], (2, 256, 4, 32)) for i in range(3))
+    ig = jax.random.normal(ks[3], (2, 256, 4))
+    fg = jax.random.normal(ks[4], (2, 256, 4)) + 2.0
+    y1, s1 = ref.mlstm_chunk_jnp(q, k, v, ig, fg, chunk=64)
+    y2, s2 = ref.mlstm_chunk_reference(q, k, v, ig, fg)
+    np.testing.assert_allclose(y1, y2, atol=5e-4, rtol=5e-3)
+    for a, b_ in zip(s1, s2):
+        np.testing.assert_allclose(a, b_, atol=5e-4, rtol=5e-3)
+
+
+def test_ssm_scan_state_handoff_equals_split_scan():
+    """Scanning [0:L] equals scanning [0:L/2] then feeding the state into
+    the sequential reference for [L/2:L] — the prefill->decode invariant."""
+    b, l, h, p, n = 1, 128, 2, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bm = jax.random.normal(ks[3], (b, l, n))
+    cm = jax.random.normal(ks[4], (b, l, n))
+    d = jax.random.normal(ks[5], (h,))
+    y_full, h_full = ref.ssm_scan_reference(x, dt, a, bm, cm, d)
+    half = l // 2
+    _, h_half = ref.ssm_scan_reference(x[:, :half], dt[:, :half], a,
+                                       bm[:, :half], cm[:, :half], d)
+    y2, h2 = ref.ssm_scan_reference(x[:, half:], dt[:, half:], a,
+                                    bm[:, half:], cm[:, half:], d, h0=h_half)
+    np.testing.assert_allclose(y2, y_full[:, half:], atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h2, h_full, atol=1e-4, rtol=1e-4)

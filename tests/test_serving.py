@@ -1,0 +1,81 @@
+"""Serving engine + checkpoint + data pipeline tests."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import MarkovTokenDataset, make_batch
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+
+
+def test_greedy_generation_matches_teacher_forced_argmax():
+    cfg = get_config("qwen2-1.5b").reduced(layers=2, d_model=64, vocab=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params)
+    batch = make_batch(cfg, 2, 8, seed=1)
+    res = eng.generate(batch, steps=4)
+    assert res.tokens.shape == (2, 12)
+    # re-derive greedily with teacher forcing over the generated stream
+    toks = res.tokens
+    for t in range(8, 12):
+        full, _ = model.forward(params, {"tokens": toks[:, :t]})
+        want = jnp.argmax(full[:, -1], -1)
+        np.testing.assert_array_equal(np.asarray(want),
+                                      np.asarray(toks[:, t]))
+    assert res.prefill_seconds > 0 and res.decode_seconds > 0
+
+
+def test_checkpoint_roundtrip_and_errors():
+    cfg = get_config("gemma-2b").reduced(layers=2, d_model=64, vocab=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        checkpointer.save(d, 7, {"params": params})
+        assert checkpointer.latest_step(d) == 7
+        restored = checkpointer.restore(d, {"params": params})
+        for a, b in zip(jax.tree.leaves(restored),
+                        jax.tree.leaves({"params": params})):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # shape mismatch must raise
+        bad = {"params": jax.tree.map(
+            lambda a: jnp.zeros(a.shape + (1,), a.dtype), params)}
+        try:
+            checkpointer.restore(d, bad)
+            raise AssertionError("expected shape mismatch error")
+        except ValueError:
+            pass
+
+
+def test_markov_dataset_deterministic():
+    a = MarkovTokenDataset(64, 16, 4, seed=3)
+    b = MarkovTokenDataset(64, 16, 4, seed=3)
+    ba = next(iter(a.batches()))
+    bb = next(iter(b.batches()))
+    np.testing.assert_array_equal(np.asarray(ba["tokens"]),
+                                  np.asarray(bb["tokens"]))
+    # tokens follow the bigram table
+    tok = np.asarray(ba["tokens"])
+    for row in tok:
+        for t in range(1, len(row)):
+            assert row[t] in a.table[row[t - 1]]
+
+
+def test_icu_generator_shapes_and_signal():
+    from repro.configs.icu_lstm import ICU_WORKLOADS
+    from repro.data import icu
+    for wl in ICU_WORKLOADS:
+        x, y = icu.generate(wl, 32, seed=1)
+        assert x.shape == (32, wl.seq_len, wl.input_dim)
+        if wl.num_classes == 25:
+            assert y.shape == (32, 25)
+        else:
+            assert set(np.unique(y)) <= {0, 1}
+            # label-conditional drift is present
+            pos = x[y == 1, -1, :4].mean()
+            neg = x[y == 0, -1, :4].mean()
+            assert pos > neg

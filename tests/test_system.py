@@ -1,0 +1,61 @@
+"""End-to-end behaviour tests for the hierarchical serving system."""
+import jax
+import numpy as np
+
+from repro.core.tiers import CC, ED, ES
+
+
+def test_serve_driver_end_to_end():
+    """Multi-patient ICU serving: calibrate -> allocate -> schedule ->
+    execute. Our allocation must meet every baseline and the lower bound."""
+    from repro.launch import serve
+    results, lb = serve.run(patients=6, horizon=20.0, seed=3,
+                            execute=True, verbose=False)
+    ours = results["ours (algorithm 2)"]
+    assert ours.weighted_sum >= lb - 1e-9
+    for name, sched in results.items():
+        assert ours.weighted_sum <= sched.weighted_sum + 1e-9, name
+    # every job scheduled exactly once, on a real tier
+    assert len(ours.entries) == 6
+    assert all(e.machine in (CC, ES, ED) for e in ours.entries)
+
+
+def test_tpu_tier_allocation_prefers_cloud_for_heavy_jobs():
+    """On the TPU fleet, a 123B-prefill-sized job belongs on the pod; a
+    tiny classifier belongs on the device chip (Algorithm 1 end-to-end
+    with flops-derived workloads)."""
+    from repro.core import allocator
+    from repro.core.cost_model import AnalyticCostModel, Job, Workload
+    from repro.core.tiers import tpu_tiers
+    from repro.configs import get_config
+    from repro.utils import flops
+
+    tiers = tpu_tiers()
+    cm = AnalyticCostModel(tiers)
+    heavy_cfg = get_config("mistral-large-123b")
+    comp = flops.forward_flops(heavy_cfg, 1, 32768, "prefill")
+    heavy = Job(Workload("mistral-prefill-32k", comp=comp,
+                         unit_bytes=32768 * 4), size=1.0)
+    assert allocator.allocate_single(cm, heavy).tier == CC
+
+    light = Job(Workload("icu-lstm", comp=1e6, unit_bytes=1e4), size=1.0)
+    assert allocator.allocate_single(cm, light).tier == ED
+
+
+def test_quickstart_pattern_trains_and_serves():
+    """The README quickstart: tiny model, a few steps, then generate."""
+    from repro.configs import get_config
+    from repro.data.pipeline import MarkovTokenDataset, make_batch
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+    from repro.training import train_loop
+
+    cfg = get_config("qwen2-1.5b").reduced(layers=2, d_model=64, vocab=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ds = MarkovTokenDataset(64, 32, 4)
+    params, _, hist = train_loop.train(model, params, ds.batches(),
+                                       steps=20, log_fn=lambda *_: None)
+    eng = ServingEngine(model, params)
+    out = eng.generate(make_batch(cfg, 1, 8), steps=4)
+    assert out.tokens.shape == (1, 12)
