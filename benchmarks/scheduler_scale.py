@@ -1,16 +1,36 @@
-"""Scheduler benchmarks beyond the paper's scale: the JAX-vectorised
-evaluator vs the Python simulator, and heuristic quality vs exact optimum
-over random fleets."""
+"""Scheduler benchmarks beyond the paper's scale.
+
+Head-to-head Algorithm-2 implementations (the repo's single hottest path):
+
+  * reference — the seed full-re-simulation Python tabu search
+    (scheduler.neighborhood_search_reference), O(rounds * n^2) simulations;
+  * incremental — the ScheduleState-backed tabu search
+    (scheduler.neighborhood_search), O(two queues) per candidate move;
+  * jax — the fully jitted neighbourhood search
+    (scheduler_jax.tabu_search_jax), one vmapped n x 3 neighbourhood
+    evaluation per lax.while_loop round, no host syncs.
+
+Also: JAX batched-evaluation throughput, heuristic optimality gap, and the
+online (non-clairvoyant) competitive ratio. Results are printed as the
+harness CSV and written machine-readable to BENCH_scheduler.json so the
+perf trajectory is tracked across PRs.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.core import scheduler, scheduler_jax
-from repro.core.simulator import MACHINES, JobSpec
+from repro.core.simulator import MACHINES, JobSpec, simulate
 from repro.core.tiers import CC, ED, ES
+
+BENCH_JSON = os.environ.get("BENCH_SCHEDULER_JSON", "BENCH_scheduler.json")
+# the seed path is O(rounds * n^2) full simulations — unusable beyond this
+REFERENCE_N_CAP = 100
 
 
 def _random_jobs(rng, n):
@@ -25,36 +45,99 @@ def _random_jobs(rng, n):
     return jobs
 
 
+def _time(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def bench_head_to_head(sizes=(10, 100, 1000), max_count=5):
+    """Python tabu (seed) vs incremental tabu vs jitted tabu, fixed seeds.
+
+    Returns a list of per-(n, method) records with seconds, weighted
+    objective, and speedup vs the reference path.
+    """
+    records = []
+    for n in sizes:
+        jobs = _random_jobs(np.random.default_rng(0), n)
+        row = {"n": n, "max_count": max_count, "methods": {}}
+
+        if n <= REFERENCE_N_CAP:
+            dt, s = _time(lambda: scheduler.neighborhood_search_reference(
+                jobs, max_count=max_count))
+            row["methods"]["reference"] = {
+                "seconds": dt, "weighted": s.weighted_sum}
+        else:
+            row["methods"]["reference"] = {
+                "seconds": None, "weighted": None,
+                "note": f"skipped: O(rounds*n^2) simulations at n={n}"}
+
+        dt, s = _time(lambda: scheduler.neighborhood_search(
+            jobs, max_count=max_count))
+        row["methods"]["incremental"] = {
+            "seconds": dt, "weighted": s.weighted_sum}
+
+        # compile outside the timed region: the jitted search is reused
+        # across replans of the same instance size in serving
+        scheduler_jax.tabu_search_jax(jobs, max_rounds=1)
+        dt, (_, a) = _time(lambda: scheduler_jax.tabu_search_jax(
+            jobs, max_rounds=max_count * n))
+        # score the returned assignment with the exact (float64) simulator
+        # so all three methods' objectives share one evaluator
+        exact = simulate(jobs, [MACHINES[int(i)] for i in a])
+        row["methods"]["jax"] = {"seconds": dt,
+                                 "weighted": exact.weighted_sum}
+
+        ref = row["methods"]["reference"]["seconds"]
+        for name, m in row["methods"].items():
+            m["speedup_vs_reference"] = (
+                ref / m["seconds"] if ref and m["seconds"] else None)
+        records.append(row)
+    return records
+
+
 def bench_scheduler_scale():
     rng = np.random.default_rng(0)
     rows, csv = [], []
+    report = {"bench": "scheduler_scale", "backend": jax.default_backend(),
+              "head_to_head": [], "eval_throughput": {}, "quality": {},
+              "online": {}}
 
-    # 1) Python tabu search at the paper's scale and 10x
-    for n in (10, 50, 100):
-        jobs = _random_jobs(rng, n)
-        t0 = time.perf_counter()
-        s = scheduler.neighborhood_search(jobs, max_count=5)
-        dt = time.perf_counter() - t0
-        base = scheduler.per_job_optimal(jobs)
-        gain = 1.0 - s.weighted_sum / base.weighted_sum
-        rows.append(("tabu", n, dt, gain))
-        csv.append(f"sched_tabu_n{n},{dt*1e6:.0f},"
-                   f"gain_vs_perjob={gain:.2%}")
+    # 1) Algorithm-2 head-to-head across implementations and scales
+    for row in bench_head_to_head():
+        report["head_to_head"].append(row)
+        n = row["n"]
+        for name, m in row["methods"].items():
+            if m["seconds"] is None:
+                continue
+            rows.append((f"tabu_{name}", n, m["seconds"], m["weighted"]))
+            speed = m["speedup_vs_reference"]
+            csv.append(
+                f"sched_tabu_{name}_n{n},{m['seconds']*1e6:.0f},"
+                f"weighted={m['weighted']:.0f}"
+                + (f";speedup_vs_seed={speed:.1f}x" if speed else ""))
 
-    # 2) JAX batched evaluation throughput
+    # 2) JAX batched evaluation throughput (incl. multi-machine tiers)
     jobs = _random_jobs(rng, 50)
     rel, w, proc, trans = scheduler_jax.specs_to_arrays(jobs)
     assigns = jax.numpy.asarray(rng.integers(0, 3, size=(4096, 50)),
                                 jax.numpy.int32)
-    scheduler_jax.evaluate_assignments(assigns, rel, w, proc, trans)  # warm
-    t0 = time.perf_counter()
-    m = scheduler_jax.evaluate_assignments(assigns, rel, w, proc, trans)
-    jax.block_until_ready(m["weighted"])
-    dt = time.perf_counter() - t0
-    per = dt / 4096 * 1e6
-    rows.append(("jax_eval", 4096, dt, per))
-    csv.append(f"sched_jax_eval_4096x50,{per:.2f},candidates_per_s="
-               f"{4096/dt:.0f}")
+    for mpt in ((1, 1), (4, 2)):
+        scheduler_jax.evaluate_assignments(assigns, rel, w, proc, trans,
+                                           machines_per_tier=mpt)  # warm
+        t0 = time.perf_counter()
+        m = scheduler_jax.evaluate_assignments(assigns, rel, w, proc, trans,
+                                               machines_per_tier=mpt)
+        jax.block_until_ready(m["weighted"])
+        dt = time.perf_counter() - t0
+        per = dt / 4096 * 1e6
+        label = f"c{mpt[0]}e{mpt[1]}"
+        rows.append((f"jax_eval_{label}", 4096, dt, per))
+        csv.append(f"sched_jax_eval_4096x50_{label},{per:.2f},"
+                   f"candidates_per_s={4096/dt:.0f}")
+        report["eval_throughput"][label] = {
+            "candidates": 4096, "n": 50, "seconds": dt,
+            "candidates_per_s": 4096 / dt}
 
     # 3) heuristic optimality gap on small instances
     gaps = []
@@ -65,6 +148,8 @@ def bench_scheduler_scale():
         gaps.append(ours.weighted_sum / max(v, 1e-9) - 1.0)
     csv.append(f"sched_optimality_gap_n8,0,mean_gap={np.mean(gaps):.2%};"
                f"max_gap={np.max(gaps):.2%}")
+    report["quality"]["optimality_gap_n8"] = {
+        "mean": float(np.mean(gaps)), "max": float(np.max(gaps))}
 
     # 4) online (non-clairvoyant) competitive ratio — beyond paper
     from repro.core import online
@@ -79,4 +164,15 @@ def bench_scheduler_scale():
     csv.append(f"sched_online_competitive,0,"
                f"greedy={np.mean(ratios_g):.3f};"
                f"tabu_replan={np.mean(ratios_t):.3f}")
+    report["online"] = {"greedy": float(np.mean(ratios_g)),
+                        "tabu_replan": float(np.mean(ratios_t))}
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    csv.append(f"# scheduler report written to {BENCH_JSON},0,")
     return rows, csv
+
+
+if __name__ == "__main__":
+    for line in bench_scheduler_scale()[1]:
+        print(line)

@@ -32,12 +32,18 @@ class _Commit:
 
 
 def online_schedule(jobs: Sequence[JobSpec], *,
-                    replan: str = "greedy") -> Schedule:
+                    replan: str = "greedy",
+                    jax_threshold: int | None = None) -> Schedule:
     """Event-driven scheduling: jobs become visible at their release.
 
     replan: "greedy" (assign on arrival, paper's greedy rule) |
             "tabu" (re-run the neighbourhood search over all visible,
             unstarted jobs at every release event).
+    jax_threshold: passed to scheduler.search — replans over more than
+    this many movable jobs run on the jitted JAX path (default: only when
+    an accelerator backend is present; see DESIGN.md §3.3). At real event
+    rates the replan at each release is the hot path, so it dispatches
+    through the same fast search as the offline planner.
     """
     order = sorted(range(len(jobs)), key=lambda i: (jobs[i].release, i))
     free: Dict[str, float] = {CC: 0.0, ES: 0.0}
@@ -57,7 +63,8 @@ def online_schedule(jobs: Sequence[JobSpec], *,
             # shift releases so the replan can't schedule before `now`
             shifted = [replace(j, release=max(j.release, now))
                        for j in visible]
-            plan = scheduler.neighborhood_search(shifted, max_count=5)
+            plan = scheduler.search(shifted, max_count=5,
+                                    jax_threshold=jax_threshold)
             # machine availability = only commitments that survive (jobs
             # already started on a shared machine)
             movable_set = set(movable)

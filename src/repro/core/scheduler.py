@@ -9,20 +9,32 @@ Pipeline:
      earliest-completing non-tabu job, try moving it to every other
      machine, keep the move with the largest positive reduction of the
      weighted whole response time (paper lines 10-28);
-  3. every candidate is evaluated with the exact discrete-event simulator
-     (core.simulator), so reported numbers always reflect C1-C5 semantics.
+  3. every candidate is scored with the incremental evaluator
+     (simulator.ScheduleState) whose per-move cost is O(two machine
+     queues); the returned Schedule is always a final exact re-simulation,
+     so reported numbers always reflect C1-C5 semantics.
 
-Also provides baseline strategies (Table VII comparison set) and an exact
+`search` dispatches between this Python path (small n) and the fully
+jitted JAX neighbourhood search (scheduler_jax.tabu_search_jax) above
+JAX_SEARCH_THRESHOLD jobs — see DESIGN.md §3.3 for the policy.
+
+Also provides baseline strategies (Table VII comparison set), an exact
 brute-force optimum for small n (the paper has none — we add it to measure
-the heuristic's optimality gap).
+the heuristic's optimality gap), and `neighborhood_search_reference`, the
+seed full-re-simulation implementation kept as a benchmark baseline and
+parity oracle.
 """
 from __future__ import annotations
 
 import itertools
 from typing import Dict, List, Sequence
 
-from repro.core.simulator import (MACHINES, JobSpec, Schedule, simulate)
+from repro.core.simulator import (MACHINES, JobSpec, Schedule, ScheduleState,
+                                  simulate)
 from repro.core.tiers import CC, ED, ES
+
+# above this many jobs, `search` uses the jitted JAX neighbourhood search
+JAX_SEARCH_THRESHOLD = 64
 
 
 # --------------------------------------------------------------- strategies
@@ -65,7 +77,54 @@ def neighborhood_search(jobs: Sequence[JobSpec],
                         initial: Sequence[str] | None = None,
                         max_count: int = 50,
                         objective: str = "weighted") -> Schedule:
-    """Paper Algorithm 2. objective: "weighted" (eq. 5) | "unweighted"."""
+    """Paper Algorithm 2. objective: "weighted" (eq. 5) | "unweighted".
+
+    Each candidate move is scored incrementally (only the two affected
+    machine queues are re-simulated), and the incumbent objective is
+    re-derived from the committed state after every accepted move — no
+    running ``best -= v_max`` accumulator, so no float drift over long
+    searches.
+    """
+    assign = list(initial or greedy_schedule(jobs))
+    state = ScheduleState(jobs, assign)
+    best = state.score(objective)
+    for _ in range(max_count):
+        tabu_job = [False] * len(jobs)
+        improved_this_round = False
+        for _inner in range(len(jobs)):
+            # earliest-completing non-tabu job (paper line 15)
+            cand = [i for i in range(len(jobs)) if not tabu_job[i]]
+            if not cand:
+                break
+            k = min(cand, key=lambda i: state.end[i])
+            tabu_job[k] = True
+            # best move for job k across machines (paper lines 17-25)
+            v_max, move = 0.0, None
+            for tier in MACHINES:
+                if tier == state.assign[k]:
+                    continue
+                v = best - state.try_move(k, tier, objective)
+                if v > v_max:
+                    v_max, move = v, tier
+            if move is not None:
+                state.apply_move(k, move)
+                best = state.score(objective)
+                improved_this_round = True
+        if not improved_this_round:
+            break
+    return state.to_schedule()
+
+
+def neighborhood_search_reference(jobs: Sequence[JobSpec],
+                                  initial: Sequence[str] | None = None,
+                                  max_count: int = 50,
+                                  objective: str = "weighted") -> Schedule:
+    """The seed implementation of Algorithm 2, kept verbatim as a benchmark
+    baseline and parity oracle: every candidate move re-runs the full
+    discrete-event simulation, and the incumbent objective is tracked by a
+    running ``best -= v_max`` accumulator (which drifts on non-integer
+    instances — fixed in `neighborhood_search`). O(rounds * n^2 * |tiers|)
+    complete simulations; use only at small n."""
     assign = list(initial or greedy_schedule(jobs))
 
     def score(a: Sequence[str]) -> float:
@@ -77,7 +136,6 @@ def neighborhood_search(jobs: Sequence[JobSpec],
         tabu_job = [False] * len(jobs)
         improved_this_round = False
         for _inner in range(len(jobs)):
-            # earliest-completing non-tabu job (paper line 15)
             sched = simulate(jobs, assign)
             ends = {id(e.job): e.end for e in sched.entries}
             cand = [i for i in range(len(jobs)) if not tabu_job[i]]
@@ -85,7 +143,6 @@ def neighborhood_search(jobs: Sequence[JobSpec],
                 break
             k = min(cand, key=lambda i: ends[id(jobs[i])])
             tabu_job[k] = True
-            # best move for job k across machines (paper lines 17-25)
             v_max, move = 0.0, None
             for tier in MACHINES:
                 if tier == assign[k]:
@@ -102,6 +159,47 @@ def neighborhood_search(jobs: Sequence[JobSpec],
         if not improved_this_round:
             break
     return simulate(jobs, assign)
+
+
+# ------------------------------------------------------------- fast dispatch
+def search(jobs: Sequence[JobSpec],
+           initial: Sequence[str] | None = None,
+           max_count: int = 50,
+           objective: str = "weighted",
+           jax_threshold: int | None = None) -> Schedule:
+    """Size-dispatched Algorithm 2: the incremental Python tabu search for
+    small instances, the fully jitted JAX neighbourhood search (one
+    vmapped n x 3 neighbourhood evaluation per round inside lax.while_loop,
+    no host syncs) for large ones. Both return an exact C1-C5 Schedule.
+
+    jax_threshold: job count above which the JAX path is taken. Default
+    (None): JAX_SEARCH_THRESHOLD when an accelerator backend is present,
+    never on CPU — there the incremental Python search is faster at every
+    scale we measured (DESIGN.md §3.3, benchmarks/scheduler_scale.py). Pass
+    an explicit threshold to force the JAX path regardless of backend.
+    """
+    n = len(jobs)
+    if jax_threshold is None:
+        use_jax = n > JAX_SEARCH_THRESHOLD and _accelerator_backend()
+    else:
+        use_jax = n > jax_threshold
+    if not use_jax:
+        return neighborhood_search(jobs, initial=initial,
+                                   max_count=max_count, objective=objective)
+    from repro.core import scheduler_jax   # lazy: keep jax off small paths
+    assign0 = initial or greedy_schedule(jobs)
+    _, best_a = scheduler_jax.tabu_search_jax(
+        jobs, initial=[MACHINES.index(t) for t in assign0],
+        max_rounds=max(max_count, 1) * len(jobs), objective=objective)
+    return simulate(jobs, [MACHINES[int(m)] for m in best_a])
+
+
+def _accelerator_backend() -> bool:
+    try:
+        import jax
+        return jax.default_backend() not in ("cpu",)
+    except Exception:                                       # pragma: no cover
+        return False
 
 
 # ------------------------------------------------------------- exact optimum
@@ -121,10 +219,13 @@ def exact_optimum(jobs: Sequence[JobSpec],
 
 
 # -------------------------------------------------------------- comparison
-def strategy_table(jobs: Sequence[JobSpec]) -> Dict[str, Schedule]:
-    """The paper's Table VII comparison set + our extras."""
+def strategy_table(jobs: Sequence[JobSpec],
+                   jax_threshold: int | None = None) -> Dict[str, Schedule]:
+    """The paper's Table VII comparison set + our extras. "ours" goes
+    through the size-dispatched `search`, so fleet-scale tables use the
+    jitted path."""
     return {
-        "ours (algorithm 2)": neighborhood_search(jobs),
+        "ours (algorithm 2)": search(jobs, jax_threshold=jax_threshold),
         "per-job optimal layer": per_job_optimal(jobs),
         "all cloud": all_on_tier(jobs, CC),
         "all edge": all_on_tier(jobs, ES),

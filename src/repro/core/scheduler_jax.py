@@ -2,21 +2,39 @@
 
 The paper's heuristic evaluates one candidate schedule at a time in Python.
 For fleet-scale serving (thousands of jobs, many candidate assignments) we
-evaluate assignment *batches* on-device: the C1-C5 semantics (FIFO by
-arrival per shared machine) vectorise as argsort + lax.scan per machine,
-vmapped over candidates. Used for:
+evaluate assignment *batches* on-device. Two observations make the C1-C5
+semantics fast to vectorise (DESIGN.md §3.2):
 
+  * each shared tier's FIFO order key (arrival, release, index) depends
+    only on the JOB SET, never on the candidate assignment — so the sort
+    happens once per instance, not once per candidate;
+  * the single-server FIFO recurrence e_j = max(arr_j, e_{j-1}) + p_j is
+    an associative scan: with P_j = cumsum(p) in queue order,
+    e_j = cummax_k<=j(arr_k - P_{k-1}) + P_j — evaluated with two
+    parallel prefix ops, no sequential lax.scan. Non-members are masked
+    transparent (p=0, arr=-inf). Multi-server tiers fall back to a
+    free-slot lax.scan identical to the Python simulator's heap.
+
+Used for:
   * exact small-n optimum: enumerate all 3^n assignments in one vmap;
-  * random-restart stochastic local search at scales where the Python
-    tabu search is too slow;
+  * `tabu_search_jax`: the fully jitted Algorithm-2 neighbourhood search —
+    every round evaluates the whole n x 3 single-move neighbourhood in one
+    vmap inside a lax.while_loop, so there are NO host<->device round
+    trips until the search terminates;
+  * random-restart stochastic local search (kept for comparison; it syncs
+    to NumPy every iteration);
   * jittable evaluation inside the serving engine's control loop.
 
-Machine encoding: 0 = cloud, 1 = edge, 2 = device (private).
+Machine encoding: 0 = cloud, 1 = edge, 2 = device (private). Shared tiers
+may have several identical machines (`machines_per_tier`, static): jobs
+are dispatched FIFO to the earliest-free machine, exactly matching the
+Python simulator's free-time heap. Queue order ties break by
+(arrival, release, job index), again matching `simulate`.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,39 +57,77 @@ def specs_to_arrays(jobs: Sequence[JobSpec]):
     return rel, w, proc, trans
 
 
-@functools.partial(jax.jit, static_argnames=())
-def evaluate_assignments(assign, rel, w, proc, trans):
-    """assign: (A, n) int32 in {0, 1, 2}. Returns dict of (A,) metrics."""
+def _tier_setup(rel, proc, trans, m: int):
+    """Assignment-independent per-tier constants: the FIFO queue order
+    (arrival, release, index — lexsort majors on its last key, stability
+    gives the index tiebreak) and arrival/processing times in that order."""
+    arr = rel + trans[:, m]
+    order = jnp.lexsort((rel, arr))
+    return order, arr[order], proc[:, m][order]
+
+
+def _shared_ends_single(mask_s, arr_s, p_s):
+    """Completion times on a 1-machine tier, in queue order, via parallel
+    prefix ops (no sequential scan): e = cummax(arr - P_prev) + P."""
+    p_eff = jnp.where(mask_s, p_s, 0.0)
+    csum = jnp.cumsum(p_eff)
+    q = jnp.where(mask_s, arr_s, -jnp.inf) - (csum - p_eff)
+    e = jax.lax.cummax(q) + csum
+    return jnp.where(mask_s, e, 0.0)
+
+
+def _shared_ends_multi(mask_s, arr_s, p_s, cnt: int):
+    """cnt-machine tier: FIFO dispatch to the earliest-free machine (the
+    vectorised analogue of the simulator's free-time heap)."""
+
+    def step(free, x):
+        valid, arr, p = x
+        slot = jnp.argmin(free)
+        start = jnp.maximum(arr, free[slot])
+        e = start + p
+        return (jnp.where(valid, free.at[slot].set(e), free),
+                jnp.where(valid, e, 0.0))
+
+    _, ends = jax.lax.scan(step, jnp.zeros((cnt,), arr_s.dtype),
+                           (mask_s, arr_s, p_s))
+    return ends
+
+
+def _make_eval(rel, w, proc, trans, machines_per_tier: Tuple[int, int]):
+    """-> eval_one(a) computing {weighted, unweighted, last} for one
+    assignment vector; the per-tier sorts are hoisted out so they run once
+    per instance, not per candidate."""
+    setups = [_tier_setup(rel, proc, trans, m) for m in (0, 1)]
+    dev_end = rel + trans[:, 2] + proc[:, 2]
 
     def eval_one(a):
-        n = a.shape[0]
-        idx = jnp.arange(n)
-        arr = rel + trans[idx, a]
-        p = proc[idx, a]
-        end = jnp.where(a == 2, arr + p, 0.0)       # private device tier
-
-        def machine_pass(end, m):
-            mask = a == m
-            key = jnp.where(mask, arr, jnp.inf)
-            # FIFO by arrival; stable ties by index (argsort is stable)
-            order = jnp.argsort(key)
-
-            def step(free, j):
-                valid = mask[j]
-                start = jnp.maximum(arr[j], free)
-                e = start + p[j]
-                return jnp.where(valid, e, free), jnp.where(valid, e, 0.0)
-
-            _, e_sorted = jax.lax.scan(step, 0.0, order)
-            return end.at[order].add(e_sorted), None
-
-        end, _ = jax.lax.scan(machine_pass, end, jnp.arange(2))
+        end = jnp.where(a == 2, dev_end, 0.0)       # private device tier
+        for m, (order, arr_s, p_s), cnt in zip(
+                (0, 1), setups, machines_per_tier):
+            mask_s = (a == m)[order]
+            if cnt == 1:
+                e_s = _shared_ends_single(mask_s, arr_s, p_s)
+            else:
+                e_s = _shared_ends_multi(mask_s, arr_s, p_s, cnt)
+            end = end.at[order].add(e_s)
         resp = end - rel
         return {"weighted": jnp.sum(w * resp),
                 "unweighted": jnp.sum(resp),
                 "last": jnp.max(end)}
 
-    return jax.vmap(eval_one)(assign)
+    return eval_one
+
+
+@functools.partial(jax.jit, static_argnames=("machines_per_tier",))
+def evaluate_assignments(assign, rel, w, proc, trans,
+                         machines_per_tier: Tuple[int, int] = (1, 1)):
+    """assign: (A, n) int32 in {0, 1, 2}. Returns dict of (A,) metrics.
+
+    machines_per_tier: static (cloud, edge) shared-machine counts — the
+    vectorised analogue of `simulate(..., machines_per_tier=...)`.
+    """
+    return jax.vmap(_make_eval(rel, w, proc, trans, machines_per_tier))(
+        assign)
 
 
 def exact_optimum_jax(jobs: Sequence[JobSpec], objective: str = "weighted",
@@ -94,6 +150,77 @@ def exact_optimum_jax(jobs: Sequence[JobSpec], objective: str = "weighted",
     return best_v, best_a
 
 
+# ----------------------------------------------- fully-jitted tabu search
+@functools.partial(jax.jit,
+                   static_argnames=("objective", "machines_per_tier"))
+def _tabu_run(assign0, rel, w, proc, trans, max_rounds,
+              objective: str, machines_per_tier: Tuple[int, int]):
+    """Steepest-descent over the n x 3 single-move neighbourhood, entirely
+    on-device: one vmapped neighbourhood evaluation per while_loop round,
+    accept the best strictly-improving move, stop at a local optimum or
+    after max_rounds moves. The incumbent objective is re-read from the
+    fresh candidate evaluation every round — no accumulator drift by
+    construction."""
+    n = assign0.shape[0]
+    eval_one = _make_eval(rel, w, proc, trans, machines_per_tier)
+    job_idx = jnp.repeat(jnp.arange(n), N_MACHINES)     # (3n,)
+    mach = jnp.tile(jnp.arange(N_MACHINES), n)          # (3n,)
+
+    def value(a):
+        return eval_one(a)[objective]
+
+    def cond(state):
+        _, _, rnd, improved = state
+        return improved & (rnd < max_rounds)
+
+    def body(state):
+        assign, best_v, rnd, _ = state
+        cand = jnp.tile(assign[None], (N_MACHINES * n, 1))
+        cand = cand.at[jnp.arange(N_MACHINES * n), job_idx].set(mach)
+        vals = jax.vmap(value)(cand)
+        vals = jnp.where(mach == assign[job_idx], jnp.inf, vals)
+        i = jnp.argmin(vals)
+        improved = vals[i] < best_v
+        return (jnp.where(improved, cand[i], assign),
+                jnp.where(improved, vals[i], best_v),
+                rnd + 1, improved)
+
+    state = (assign0, value(assign0), jnp.int32(0), jnp.bool_(True))
+    assign, best_v, rounds, _ = jax.lax.while_loop(cond, body, state)
+    return assign, best_v, rounds
+
+
+def tabu_search_jax(jobs: Sequence[JobSpec],
+                    initial: Sequence[int] | np.ndarray | None = None,
+                    *, max_rounds: int | None = None,
+                    objective: str = "weighted",
+                    machines_per_tier: Tuple[int, int] = (1, 1)):
+    """Fully-jitted Algorithm-2 neighbourhood search. Returns
+    (best objective value, best assignment as an (n,) int array).
+
+    Unlike `stochastic_search` (which syncs to NumPy every iteration),
+    the whole search — candidate generation, n x 3 neighbourhood
+    evaluation, move acceptance, termination — runs inside one jitted
+    lax.while_loop; the only transfer is the final result. Each accepted
+    move strictly improves the objective, so the search terminates at a
+    1-move local optimum of the same neighbourhood the Python tabu search
+    explores."""
+    n = len(jobs)
+    rel, w, proc, trans = specs_to_arrays(jobs)
+    if initial is None:
+        from repro.core import scheduler                   # no import cycle:
+        from repro.core.simulator import MACHINES          # scheduler lazy-
+        initial = [MACHINES.index(t)                       # loads this module
+                   for t in scheduler.greedy_schedule(jobs)]
+    assign0 = jnp.asarray(initial, jnp.int32)
+    if max_rounds is None:
+        max_rounds = 50 * n
+    assign, best_v, _ = _tabu_run(assign0, rel, w, proc, trans,
+                                  jnp.int32(max_rounds), objective,
+                                  machines_per_tier)
+    return float(best_v), np.asarray(assign)
+
+
 def stochastic_search(jobs: Sequence[JobSpec], key,
                       initial: np.ndarray, *, iters: int = 200,
                       pop: int = 256, objective: str = "weighted"):
@@ -102,7 +229,8 @@ def stochastic_search(jobs: Sequence[JobSpec], key,
     Each iteration proposes `pop` single-job reassignments of the incumbent
     and keeps the best. Converges to (at least) a 1-swap local optimum of
     the same neighbourhood Algorithm 2 explores, but evaluates the whole
-    neighbourhood batch in one device call.
+    neighbourhood batch in one device call. Kept as the host-synced
+    baseline for `tabu_search_jax` (see benchmarks/scheduler_scale.py).
     """
     n = len(jobs)
     rel, w, proc, trans = specs_to_arrays(jobs)

@@ -12,9 +12,10 @@ see DESIGN.md §1):
 """
 from __future__ import annotations
 
+import bisect
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Sequence
+from typing import Dict, List, Mapping, Sequence, Tuple
 
 from repro.core.tiers import CC, ED, ES, TIER_ORDER
 
@@ -100,3 +101,201 @@ def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
     last = max(e.end for e in done) if done else 0.0
     return Schedule(entries=done, weighted_sum=weighted,
                     unweighted_sum=unweighted, last_end=last)
+
+
+# ------------------------------------------------- incremental evaluation
+_SHARED = (CC, ES)
+_OBJ = {"weighted": 0, "unweighted": 1, "last": 2}
+
+
+class ScheduleState:
+    """Incremental evaluator over job->tier assignments (DESIGN.md §3.1).
+
+    Moving one job between tiers only perturbs the two affected machine
+    queues (C1-C5 are per-machine FIFO semantics), so this caches each
+    tier's FIFO queue, per-job completion times, and per-tier objective
+    sums. A single-move trial then costs O(|src queue| + |dst queue|) —
+    and O(1) on the private device tier, whose per-job contributions are
+    constants — instead of a full O(n log n) re-simulation. This is the
+    hot path of the Algorithm-2 tabu search.
+
+    Invariants (DESIGN.md §3.1): COMMITTED per-tier stats are always
+    recomputed from the tier's full queue (never updated by +=/-= deltas),
+    so the incumbent objective is drift-free; ``end`` always mirrors what
+    ``simulate`` would produce for the current assignment. Only trial
+    scores from ``try_move`` may use a single non-accumulated +/- of a
+    precomputed constant (device tier), bounded by one rounding error.
+    """
+
+    def __init__(self, jobs: Sequence[JobSpec], assignment: Sequence[str],
+                 machines_per_tier: Mapping[str, int] | None = None):
+        assert len(jobs) == len(assignment)
+        self.jobs = list(jobs)
+        self.assign = list(assignment)
+        self.machines = dict(machines_per_tier or {CC: 1, ES: 1})
+        n = len(self.jobs)
+        self.end: List[float] = [0.0] * n
+        # per-job constants: releases, weights, per-tier proc, FIFO keys,
+        # and the device tier's fixed completion/response contributions
+        self._rel = [j.release for j in self.jobs]
+        self._w = [j.weight for j in self.jobs]
+        self._proc = {t: [j.proc[t] for j in self.jobs] for t in _SHARED}
+        self._keys = {
+            t: [(j.release + j.trans[t], j.release, i)
+                for i, j in enumerate(self.jobs)] for t in _SHARED}
+        self._dev_end = [j.release + j.trans.get(ED, 0.0) + j.proc[ED]
+                         for j in self.jobs]
+        self._dev_resp = [e - r for e, r in zip(self._dev_end, self._rel)]
+        self._dev_wresp = [w * r for w, r in zip(self._w, self._dev_resp)]
+        # shared tiers: sorted [(key, idx)] with key = (arrival, release, i)
+        self._members: Dict[str, List[Tuple[Tuple[float, float, int], int]]]
+        self._members = {
+            tier: sorted((self._keys[tier][i], i)
+                         for i, t in enumerate(self.assign) if t == tier)
+            for tier in _SHARED}
+        self._device: List[int] = sorted(
+            i for i, t in enumerate(self.assign) if t == ED)
+        self._stats: Dict[str, Tuple[float, float, float]] = {}
+        for tier in _SHARED:
+            ends, self._stats[tier] = self._sim_shared(
+                tier, self._members[tier])
+            for (_, i), e in zip(self._members[tier], ends):
+                self.end[i] = e
+        for i in self._device:
+            self.end[i] = self._dev_end[i]
+        self._stats[ED] = self._device_stats(self._device)
+
+    # ------------------------------------------------------------ internals
+    def _device_stats(self, members: Sequence[int]):
+        w = sum(self._dev_wresp[i] for i in members)
+        u = sum(self._dev_resp[i] for i in members)
+        last = max((self._dev_end[i] for i in members), default=0.0)
+        return w, u, last
+
+    def _sim_shared(self, tier: str, members):
+        """One FIFO pass over a shared tier's sorted queue.
+
+        Returns (ends aligned with members, (weighted, unweighted, last)).
+        Identical machine semantics to ``simulate``: a free-time heap of
+        ``machines[tier]`` servers, start = max(arrival, earliest free);
+        the single-server case runs heap-free.
+        """
+        rel, wgt, proc = self._rel, self._w, self._proc[tier]
+        m = self.machines.get(tier, 1)
+        ends: List[float] = []
+        append = ends.append
+        w = u = last = 0.0
+        if m == 1:
+            free = 0.0
+            for key, i in members:
+                arr = key[0]
+                start = arr if arr > free else free
+                free = e = start + proc[i]
+                append(e)
+                resp = e - rel[i]
+                w += wgt[i] * resp
+                u += resp
+            last = free if ends else 0.0
+        else:
+            heap = [0.0] * m
+            for key, i in members:
+                arr = key[0]
+                avail = heapq.heappop(heap)
+                start = arr if arr > avail else avail
+                e = start + proc[i]
+                heapq.heappush(heap, e)
+                append(e)
+                resp = e - rel[i]
+                w += wgt[i] * resp
+                u += resp
+                if e > last:
+                    last = e
+        return ends, (w, u, last)
+
+    def _shared_move_stats(self, tier: str, k: int, insert: bool):
+        """(stats, members, ends) for tier with job k removed/inserted."""
+        if insert:
+            mem = list(self._members[tier])
+            bisect.insort(mem, (self._keys[tier][k], k))
+        else:
+            mem = [m for m in self._members[tier] if m[1] != k]
+        ends, stats = self._sim_shared(tier, mem)
+        return stats, mem, ends
+
+    def _device_move_val(self, k: int, insert: bool, oi: int) -> float:
+        """Device-tier stat component after removing/inserting job k.
+
+        O(1) for the sum objectives (per-job contributions are constants
+        on the private tier); "last" removal rescans only when k held the
+        maximum."""
+        w, u, last = self._stats[ED]
+        if oi == 0:
+            return w + self._dev_wresp[k] if insert else w - self._dev_wresp[k]
+        if oi == 1:
+            return u + self._dev_resp[k] if insert else u - self._dev_resp[k]
+        if insert:
+            return last if last > self._dev_end[k] else self._dev_end[k]
+        if self._dev_end[k] < last:
+            return last
+        return max((self._dev_end[i] for i in self._device if i != k),
+                   default=0.0)
+
+    # ------------------------------------------------------------------ api
+    def score(self, objective: str = "weighted") -> float:
+        """Current objective, recomputed from per-tier sums (drift-free)."""
+        oi = _OBJ[objective]
+        a, b, c = (self._stats[CC][oi], self._stats[ES][oi],
+                   self._stats[ED][oi])
+        return max(a, b, c) if oi == 2 else a + b + c
+
+    def try_move(self, k: int, dst: str,
+                 objective: str = "weighted") -> float:
+        """Objective value if job k were moved to dst (no mutation).
+
+        Costs one FIFO pass per affected shared queue; the device tier is
+        O(1) (sum objectives)."""
+        src = self.assign[k]
+        if dst == src:
+            return self.score(objective)
+        oi = _OBJ[objective]
+        vals = []
+        for tier in (CC, ES, ED):
+            if tier == src or tier == dst:
+                if tier == ED:
+                    vals.append(self._device_move_val(k, tier == dst, oi))
+                else:
+                    stats, _, _ = self._shared_move_stats(
+                        tier, k, insert=(tier == dst))
+                    vals.append(stats[oi])
+            else:
+                vals.append(self._stats[tier][oi])
+        return max(vals) if oi == 2 else vals[0] + vals[1] + vals[2]
+
+    def apply_move(self, k: int, dst: str) -> None:
+        """Commit job k to dst, updating queues, ends, and tier stats.
+
+        All committed stats are full-queue recomputations (drift-free)."""
+        src = self.assign[k]
+        if dst == src:
+            return
+        for tier, insert in ((src, False), (dst, True)):
+            if tier in _SHARED:
+                stats, mem, ends = self._shared_move_stats(tier, k, insert)
+                self._stats[tier] = stats
+                self._members[tier] = mem
+                for (_, i), e in zip(mem, ends):
+                    self.end[i] = e
+            else:
+                if insert:
+                    bisect.insort(self._device, k)
+                    self.end[k] = self._dev_end[k]
+                else:
+                    self._device.remove(k)
+                self._stats[ED] = self._device_stats(self._device)
+        self.assign[k] = dst
+
+    def to_schedule(self) -> Schedule:
+        """Exact Schedule for the current assignment (via ``simulate``, so
+        reported sums match the reference evaluator bit-for-bit)."""
+        return simulate(self.jobs, self.assign,
+                        machines_per_tier=self.machines)

@@ -210,6 +210,8 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
         cost = compiled.cost_analysis() or {}
     except Exception:
         cost = {}
+    if isinstance(cost, (list, tuple)):    # jax >= 0.4.30: list of per-
+        cost = cost[0] if cost else {}     # computation dicts
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     if hlo_dir:

@@ -66,7 +66,9 @@ def make_jobs(rng, patients: int, horizon: float):
 
 
 def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
-        execute=True, quantum=None, verbose=True):
+        execute=True, quantum=None, verbose=True, jax_threshold=None):
+    """jax_threshold: fleets larger than this replan on the jitted JAX
+    search (scheduler.search dispatch; default auto — accelerator only)."""
     rng = np.random.default_rng(seed)
     tiers = paper_tiers() if tiers_kind == "paper" else tpu_tiers()
 
@@ -83,7 +85,7 @@ def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
         min(cost_model.times(j)[t][1] for t in tiers) for j in jobs)
     specs = jobs_to_specs(cost_model, jobs, normalize=quantum)
 
-    table = scheduler.strategy_table(specs)
+    table = scheduler.strategy_table(specs, jax_threshold=jax_threshold)
     lb = paper_lower_bound(specs)
     results = {}
     if verbose:
@@ -121,9 +123,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tiers", choices=("paper", "tpu"), default="paper")
     ap.add_argument("--no-execute", action="store_true")
+    ap.add_argument("--jax-threshold", type=int, default=None,
+                    help="force the jitted JAX search above this many jobs "
+                         "(default: auto — accelerator backends only)")
     args = ap.parse_args()
     run(patients=args.patients, horizon=args.horizon, seed=args.seed,
-        tiers_kind=args.tiers, execute=not args.no_execute)
+        tiers_kind=args.tiers, execute=not args.no_execute,
+        jax_threshold=args.jax_threshold)
 
 
 if __name__ == "__main__":

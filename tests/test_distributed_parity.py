@@ -5,11 +5,15 @@ semantics-preserving: the same reduced model, same data, trained 5 steps on
 a (2 data x 4 model) mesh with the full sharding policy vs unsharded — the
 loss trajectories must match to float tolerance. Runs in a subprocess with
 8 forced host devices."""
+import pytest
+
 import os
 import subprocess
 import sys
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+pytestmark = pytest.mark.slow
 
 CODE = r"""
 import os

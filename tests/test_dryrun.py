@@ -6,6 +6,8 @@ machinery itself: the 512-device env bootstrap, the mesh builders, the
 collective-bytes HLO parser, and one real (small-arch) lower+compile in a
 subprocess (device count must be set before jax initialises, so the main
 pytest process — which sees 1 CPU — can't do it inline)."""
+import pytest
+
 import json
 import os
 import subprocess
@@ -22,6 +24,7 @@ def run_py(code: str, timeout=560):
                           timeout=timeout)
 
 
+@pytest.mark.slow
 def test_production_mesh_shapes_in_subprocess():
     out = run_py(
         "import os;"
@@ -33,6 +36,7 @@ def test_production_mesh_shapes_in_subprocess():
     assert "{'pod': 2, 'data': 16, 'model': 16}" in out.stdout
 
 
+@pytest.mark.slow
 def test_single_case_dryrun_subprocess():
     """qwen2-1.5b decode_32k: fastest-compiling real case (~3 s)."""
     out = run_py(

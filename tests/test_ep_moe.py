@@ -1,11 +1,15 @@
 """Expert-parallel MoE (shard_map all-to-all) vs the TP reference path.
 
 Needs >1 device, so it runs in a subprocess with forced host devices."""
+import pytest
+
 import os
 import subprocess
 import sys
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+pytestmark = pytest.mark.slow
 
 CODE = r"""
 import os

@@ -26,7 +26,9 @@ ATTN_CASES = [
 
 
 @pytest.mark.parametrize("case", ATTN_CASES, ids=str)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow)])
 def test_flash_attention_matches_oracle(case, dtype):
     b, hq, hkv, lq, lk, d, causal, window, softcap = case
     ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
@@ -56,8 +58,10 @@ def test_attention_blockwise_matches_reference():
         np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
 
 
-@pytest.mark.parametrize("shape", [(4, 76, 16), (128, 64, 128), (8, 17, 8),
-                                   (32, 130, 256)], ids=str)
+@pytest.mark.parametrize("shape", [
+    (4, 76, 16), (8, 17, 8),
+    pytest.param((128, 64, 128), marks=pytest.mark.slow),
+    pytest.param((32, 130, 256), marks=pytest.mark.slow)], ids=str)
 def test_lstm_cell_matches_oracle(shape):
     b, i_dim, h_dim = shape
     ks = jax.random.split(jax.random.PRNGKey(b), 6)
@@ -76,8 +80,10 @@ def test_lstm_cell_matches_oracle(shape):
     np.testing.assert_allclose(c2, cr, atol=1e-5)
 
 
-SSM_CASES = [(2, 128, 4, 16, 16, 32, 2), (1, 256, 8, 32, 64, 64, 4),
-             (2, 64, 2, 8, 16, 64, 2)]
+SSM_CASES = [
+    (2, 64, 2, 8, 16, 64, 2),
+    pytest.param((2, 128, 4, 16, 16, 32, 2), marks=pytest.mark.slow),
+    pytest.param((1, 256, 8, 32, 64, 64, 4), marks=pytest.mark.slow)]
 
 
 @pytest.mark.parametrize("case", SSM_CASES, ids=str)
@@ -97,8 +103,10 @@ def test_ssm_scan_matches_oracle(case):
     np.testing.assert_allclose(hf, hr, atol=3e-4, rtol=3e-4)
 
 
-MLSTM_CASES = [(2, 128, 4, 32, 32, 2), (1, 64, 2, 64, 16, 1),
-               (2, 256, 4, 16, 64, 4)]
+MLSTM_CASES = [
+    (1, 64, 2, 64, 16, 1),
+    pytest.param((2, 128, 4, 32, 32, 2), marks=pytest.mark.slow),
+    pytest.param((2, 256, 4, 16, 64, 4), marks=pytest.mark.slow)]
 
 
 @pytest.mark.parametrize("case", MLSTM_CASES, ids=str)

@@ -1,4 +1,6 @@
 """int8-quantised KV cache: accuracy + memory accounting."""
+import pytest
+
 import dataclasses
 
 import jax
@@ -35,6 +37,7 @@ def _run_decode(cfg, seed=0):
     return full, outs, cache
 
 
+@pytest.mark.slow
 def test_int8_decode_close_to_native():
     base = get_config("qwen2-1.5b").reduced(layers=2, d_model=128, vocab=256)
     cfg8 = dataclasses.replace(base, kv_cache_dtype="int8")

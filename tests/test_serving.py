@@ -1,4 +1,6 @@
 """Serving engine + checkpoint + data pipeline tests."""
+import pytest
+
 import tempfile
 
 import jax
@@ -12,6 +14,7 @@ from repro.models import build_model
 from repro.serving.engine import ServingEngine
 
 
+@pytest.mark.slow
 def test_greedy_generation_matches_teacher_forced_argmax():
     cfg = get_config("qwen2-1.5b").reduced(layers=2, d_model=64, vocab=64)
     model = build_model(cfg)

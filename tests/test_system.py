@@ -1,8 +1,12 @@
 """End-to-end behaviour tests for the hierarchical serving system."""
+import pytest
+
 import jax
 import numpy as np
 
 from repro.core.tiers import CC, ED, ES
+
+pytestmark = pytest.mark.slow
 
 
 def test_serve_driver_end_to_end():

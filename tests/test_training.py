@@ -1,4 +1,6 @@
 """Optimizer math, microbatch-equivalence, end-to-end learnability."""
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -31,6 +33,7 @@ def test_grad_clip_bounds_update():
     assert float(stats["grad_norm"]) == 200.0
 
 
+@pytest.mark.slow
 def test_microbatch_grads_equal_full_batch():
     """Grad accumulation must produce the same update as one big batch."""
     cfg = get_config("qwen2-1.5b").reduced(layers=2, d_model=64, vocab=64)
@@ -54,6 +57,7 @@ def test_microbatch_grads_equal_full_batch():
                                    atol=1e-5, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_loss_learns_markov_structure():
     cfg = get_config("gemma-2b").reduced(layers=2, d_model=128, vocab=128)
     model = build_model(cfg)
