@@ -11,12 +11,15 @@ Head-to-head Algorithm-2 implementations (the repo's single hottest path):
     evaluation per lax.while_loop round, no host syncs.
 
 Also: JAX batched-evaluation throughput, heuristic optimality gap, and the
-online (non-clairvoyant) competitive ratio. Results are printed as the
-harness CSV and written machine-readable to BENCH_scheduler.json so the
-perf trajectory is tracked across PRs.
+online (non-clairvoyant) competitive ratio — including, behind ``--online``,
+per-arrival-scenario ratios (poisson steady-state / ER-surge burst /
+nightly-quiet, core.problems.ONLINE_SCENARIOS) on single- and multi-server
+fleets. Results are printed as the harness CSV and written machine-readable
+to BENCH_scheduler.json so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -96,7 +99,35 @@ def bench_head_to_head(sizes=(10, 100, 1000), max_count=5):
     return records
 
 
-def bench_scheduler_scale():
+def bench_online_scenarios(seeds=6, n=20):
+    """Competitive ratio (online / clairvoyant-offline, both through the
+    size-dispatched search) per arrival scenario and fleet shape."""
+    from repro.core import online
+    from repro.core.problems import ONLINE_SCENARIOS
+
+    out = {}
+    for scen, gen in ONLINE_SCENARIOS.items():
+        out[scen] = {}
+        for fleet, mpt in (("c1e1", {CC: 1, ES: 1}),
+                           ("c2e3", {CC: 2, ES: 3})):
+            ratios = {"greedy": [], "tabu": []}
+            for seed in range(seeds):
+                jobs = gen(np.random.default_rng(1000 + seed), n=n)
+                # one clairvoyant baseline per instance, shared by both
+                # replan modes (the offline search dominates the cost)
+                off = scheduler.search(jobs, machines_per_tier=mpt)
+                for replan in ("greedy", "tabu"):
+                    on = online.online_schedule(jobs, replan=replan,
+                                                machines_per_tier=mpt)
+                    ratios[replan].append(
+                        on.weighted_sum / max(off.weighted_sum, 1e-9))
+            out[scen][fleet] = {
+                replan: {"mean": float(np.mean(r)), "max": float(np.max(r))}
+                for replan, r in ratios.items()}
+    return out
+
+
+def bench_scheduler_scale(with_online_scenarios: bool = False):
     rng = np.random.default_rng(0)
     rows, csv = [], []
     report = {"bench": "scheduler_scale", "backend": jax.default_backend(),
@@ -167,6 +198,17 @@ def bench_scheduler_scale():
     report["online"] = {"greedy": float(np.mean(ratios_g)),
                         "tabu_replan": float(np.mean(ratios_t))}
 
+    # 5) per-scenario online competitive ratios (slower; gated by --online)
+    if with_online_scenarios:
+        scen = bench_online_scenarios()
+        report["online"]["scenarios"] = scen
+        for name, fleets in scen.items():
+            for fleet, ratios in fleets.items():
+                csv.append(
+                    f"sched_online_{name}_{fleet},0,"
+                    f"greedy={ratios['greedy']['mean']:.3f};"
+                    f"tabu_replan={ratios['tabu']['mean']:.3f}")
+
     with open(BENCH_JSON, "w") as f:
         json.dump(report, f, indent=2)
     csv.append(f"# scheduler report written to {BENCH_JSON},0,")
@@ -174,5 +216,10 @@ def bench_scheduler_scale():
 
 
 if __name__ == "__main__":
-    for line in bench_scheduler_scale()[1]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--online", action="store_true",
+                    help="also run the (slower) per-scenario online "
+                         "competitive-ratio section")
+    args = ap.parse_args()
+    for line in bench_scheduler_scale(with_online_scenarios=args.online)[1]:
         print(line)

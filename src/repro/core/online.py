@@ -7,19 +7,36 @@ not-yet-started jobs with the paper's own machinery (Algorithm 1 costs +
 greedy/tabu search), honouring commitments already made (running jobs are
 non-preemptible, C2).
 
+The replanned problem is the COMMITTED problem (DESIGN.md §7): each
+replan hands `scheduler.search` the true fleet state — multi-server
+tiers via `machines_per_tier` and the free time of every machine still
+occupied by a started job via `busy_until` — and the plan's start/end
+times are committed verbatim. The objective the search optimises is
+therefore bit-for-bit the objective of the commits it produces
+(`tests/test_online.py::test_replan_objective_parity`).
+
+Transmission on replan (C4 under re-decision): a pending job's data
+shipped toward its committed tier at release, so staying there keeps
+arrival = release + transmission (clamped at `now` — data already in
+flight counts); moving to any other tier re-ships from the device at
+`now`, so arrival = now + transmission. New arrivals have no commitment
+and ship wherever the plan puts them.
+
 `competitive_ratio` measures the price of not knowing the future against
-the clairvoyant offline optimum on the same instance — reported in
-benchmarks/scheduler_scale.py.
+the clairvoyant offline optimum on the same instance — reported per
+arrival scenario in benchmarks/scheduler_scale.py.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, List, Sequence
+from typing import Dict, List, Mapping, Sequence
 
 from repro.core import scheduler
 from repro.core.simulator import (MACHINES, JobSpec, Schedule, ScheduledJob,
-                                  simulate)
+                                  machine_free_times, simulate)
 from repro.core.tiers import CC, ED, ES
+
+_SHARED = (CC, ES)
 
 
 @dataclass
@@ -31,9 +48,55 @@ class _Commit:
     end: float
 
 
+def _replan_spec(job: JobSpec, commit: _Commit | None, now: float) -> JobSpec:
+    """The job as the replan at time `now` sees it.
+
+    Release is shifted to `now` (nothing can be decided earlier); the
+    per-tier transmission becomes the REMAINING shipping time: the tier
+    the job is already committed to keeps its in-flight data (arrival
+    max(now, release + trans), i.e. remaining = max(0, arrival - now)),
+    every other tier re-ships from scratch. Shifting every movable job's
+    release by the same event time changes each candidate's objective by
+    the same constant, so the argmin — and the committed starts/ends —
+    are those of the true problem.
+    """
+    if commit is None or commit.machine == ED:
+        return replace(job, release=now)
+    trans = dict(job.trans)
+    # commit.arrival is when the data actually reaches the committed tier
+    # (it re-ships on every move, so release + trans would undercount)
+    trans[commit.machine] = max(0.0, commit.arrival - now)
+    return replace(job, release=now, trans=trans)
+
+
+def _busy_vectors(commits: Sequence[_Commit | None], movable: Sequence[int],
+                  now: float, machines_per_tier: Mapping[str, int]
+                  ) -> Dict[str, List[float]]:
+    """Free times of shared machines still occupied by surviving commits.
+
+    Survivors all started at or before `now` (movable jobs are exactly
+    those with a future start), so the ones still running at `now` overlap
+    there — at most one per machine. Machines whose last job already ended
+    are free immediately.
+    """
+    movable_set = set(movable)
+    busy: Dict[str, List[float]] = {t: [] for t in _SHARED}
+    for i, c in enumerate(commits):
+        if c is None or i in movable_set or c.machine not in busy:
+            continue
+        if c.end > now:
+            busy[c.machine].append(c.end)
+    for tier in _SHARED:
+        assert len(busy[tier]) <= machines_per_tier.get(tier, 1), \
+            f"more running jobs than machines on {tier}"
+    return busy
+
+
 def online_schedule(jobs: Sequence[JobSpec], *,
                     replan: str = "greedy",
-                    jax_threshold: int | None = None) -> Schedule:
+                    jax_threshold: int | None = None,
+                    machines_per_tier: Mapping[str, int] | None = None,
+                    trace: List[dict] | None = None) -> Schedule:
     """Event-driven scheduling: jobs become visible at their release.
 
     replan: "greedy" (assign on arrival, paper's greedy rule) |
@@ -44,63 +107,64 @@ def online_schedule(jobs: Sequence[JobSpec], *,
     an accelerator backend is present; see DESIGN.md §3.3). At real event
     rates the replan at each release is the hot path, so it dispatches
     through the same fast search as the offline planner.
+    machines_per_tier: shared-server counts (TierSpec.machines); both
+    replan modes honour multi-server fleets.
+    trace: if a list is passed, one dict per tabu replan event is appended
+    with the search-reported objective, the objective of the commits
+    recorded, and the busy vectors used — the replan==commit invariant's
+    audit trail (DESIGN.md §7).
     """
+    mpt = dict(machines_per_tier or {CC: 1, ES: 1})
     order = sorted(range(len(jobs)), key=lambda i: (jobs[i].release, i))
-    free: Dict[str, float] = {CC: 0.0, ES: 0.0}
-    commits: List[_Commit] = [None] * len(jobs)  # type: ignore
-
+    commits: List[_Commit | None] = [None] * len(jobs)
+    # greedy mode: per-tier machine free times, maintained incrementally
+    free = {t: machine_free_times(None, t, mpt.get(t, 1)) for t in _SHARED}
     pending: List[int] = []
+
     for idx in order:
         job = jobs[idx]
         now = job.release
         pending.append(idx)
-        if replan == "tabu" and len(pending) > 1:
-            # re-plan every pending (committed-but-not-started) job whose
-            # machine slot hasn't begun yet
+        if replan == "tabu":
+            # replan every job whose machine slot hasn't begun (C2: started
+            # jobs are committed for good and only constrain availability)
             movable = [i for i in pending
                        if commits[i] is None or commits[i].start > now]
-            visible = [jobs[i] for i in movable]
-            # shift releases so the replan can't schedule before `now`
-            shifted = [replace(j, release=max(j.release, now))
-                       for j in visible]
+            shifted = [_replan_spec(jobs[i], commits[i], now)
+                       for i in movable]
+            busy = _busy_vectors(commits, movable, now, mpt)
             plan = scheduler.search(shifted, max_count=5,
-                                    jax_threshold=jax_threshold)
-            # machine availability = only commitments that survive (jobs
-            # already started on a shared machine)
-            movable_set = set(movable)
-            base_free = {CC: 0.0, ES: 0.0}
-            for i, c in enumerate(commits):
-                if c is not None and i not in movable_set \
-                        and c.machine in base_free:
-                    base_free[c.machine] = max(base_free[c.machine], c.end)
-            # wipe and re-commit in the plan's machine order
-            for i in movable:
-                commits[i] = None
-            for entry, i in sorted(
-                    zip(plan.entries, movable), key=lambda t: t[0].start):
-                tier = entry.machine
-                arr = jobs[i].release + jobs[i].trans.get(tier, 0.0)
-                start = arr if tier == ED else max(arr, base_free[tier], now)
-                end = start + jobs[i].proc[tier]
-                if tier != ED:
-                    base_free[tier] = end
-                commits[i] = _Commit(jobs[i], tier, arr, start, end)
-            free = base_free
+                                    jax_threshold=jax_threshold,
+                                    machines_per_tier=mpt, busy_until=busy)
+            # commit the plan verbatim: the entries' starts/ends ARE the
+            # schedule the search scored (plan.entries aligns with shifted)
+            for entry, i in zip(plan.entries, movable):
+                commits[i] = _Commit(jobs[i], entry.machine, entry.arrival,
+                                     entry.start, entry.end)
+            if trace is not None:
+                committed = sum(
+                    s.weight * (commits[i].end - s.release)
+                    for s, i in zip(shifted, movable))
+                trace.append({"now": now, "movable": list(movable),
+                              "busy": busy, "reported": plan.weighted_sum,
+                              "committed": committed})
+            pending = movable
         else:
-            # paper greedy on arrival
-            best_t, best_end = None, float("inf")
-            for tier in (ED, ES, CC):
-                arr = now + job.trans.get(tier, 0.0)
-                start = arr if tier == ED else max(arr, free[tier])
-                end = start + job.proc[tier]
-                if end < best_end:
-                    best_t, best_end = tier, end
-            arr = now + job.trans.get(best_t, 0.0)
-            start = arr if best_t == ED else max(arr, free[best_t])
-            commits[idx] = _Commit(job, best_t, arr, start,
-                                   start + job.proc[best_t])
-            if best_t != ED:
-                free[best_t] = commits[idx].end
+            # paper greedy on arrival — the same rule as the offline
+            # initial solution, one event at a time (scheduler.greedy_schedule)
+            tier = scheduler.greedy_schedule(
+                [job], machines_per_tier=mpt,
+                busy_until={t: free[t] for t in _SHARED})[0]
+            arr = now + job.trans.get(tier, 0.0)
+            if tier == ED:
+                start = arr
+            else:
+                vec = free[tier]
+                k = min(range(len(vec)), key=vec.__getitem__)
+                start = max(arr, vec[k])
+                vec[k] = start + job.proc[tier]
+            commits[idx] = _Commit(job, tier, arr, start,
+                                   start + job.proc[tier])
 
     entries = [ScheduledJob(c.job, c.machine, c.arrival, c.start, c.end)
                for c in commits]
@@ -111,8 +175,18 @@ def online_schedule(jobs: Sequence[JobSpec], *,
                     last_end=max(e.end for e in entries))
 
 
-def competitive_ratio(jobs: Sequence[JobSpec], replan: str = "tabu") -> float:
-    """online / clairvoyant-offline weighted response ratio (>= ~1)."""
-    online = online_schedule(jobs, replan=replan)
-    offline = scheduler.neighborhood_search(jobs)
+def competitive_ratio(jobs: Sequence[JobSpec], replan: str = "tabu", *,
+                      jax_threshold: int | None = None,
+                      machines_per_tier: Mapping[str, int] | None = None
+                      ) -> float:
+    """online / clairvoyant-offline weighted response ratio (>= ~1).
+
+    The offline side goes through the size-dispatched `scheduler.search`,
+    so fleet-scale ratios use the same jitted path as the replanner.
+    """
+    online = online_schedule(jobs, replan=replan,
+                             jax_threshold=jax_threshold,
+                             machines_per_tier=machines_per_tier)
+    offline = scheduler.search(jobs, jax_threshold=jax_threshold,
+                               machines_per_tier=machines_per_tier)
     return online.weighted_sum / max(offline.weighted_sum, 1e-9)

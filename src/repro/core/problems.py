@@ -1,11 +1,14 @@
-"""Bridges between cost models / paper tables and scheduler JobSpecs."""
+"""Bridges between cost models / paper tables and scheduler JobSpecs,
+plus arrival-scenario generators for the online scheduler (DESIGN.md §7)."""
 from __future__ import annotations
 
 import math
 from typing import Dict, List, Sequence
 
+import numpy as np
+
 from repro.core.cost_model import CostModel, Job
-from repro.core.simulator import JobSpec
+from repro.core.simulator import MACHINES, JobSpec
 from repro.core.tiers import CC, ED, ES
 
 
@@ -25,7 +28,8 @@ def jobs_to_specs(cost_model: CostModel, jobs: Sequence[Job],
             proc[tier], trans[tier] = i, d
         specs.append(JobSpec(name=job.name or job.workload.name,
                              release=job.release, weight=job.priority,
-                             proc=proc, trans=trans))
+                             proc=proc, trans=trans,
+                             workload=job.workload.name))
     return specs
 
 
@@ -50,3 +54,55 @@ def table6_jobs() -> List[JobSpec]:
                     proc={CC: pc, ES: pe, ED: pd},
                     trans={CC: tc, ES: te, ED: 0.0})
             for (n, r, w, pc, tc, pe, te, pd) in rows]
+
+
+# ---------------------------------------------- online arrival scenarios
+# Cost ranges follow the paper's Table VI magnitudes (proc 1-30 units,
+# cloud-heavy transmission); only the ARRIVAL PROCESS differs per scenario.
+def _spec_at(rng: np.random.Generator, i: int, release: float) -> JobSpec:
+    return JobSpec(
+        name=f"J{i}", release=float(release),
+        weight=float(rng.integers(1, 4)),
+        proc={t: float(rng.integers(1, 30)) for t in MACHINES},
+        trans={CC: float(rng.integers(0, 60)),
+               ES: float(rng.integers(0, 15)), ED: 0.0})
+
+
+def poisson_jobs(rng: np.random.Generator, n: int = 20,
+                 rate: float = 0.2) -> List[JobSpec]:
+    """Steady-state ward: memoryless arrivals at `rate` jobs per time unit
+    (exponential inter-arrival times) — the baseline online scenario."""
+    releases = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [_spec_at(rng, i, r) for i, r in enumerate(releases)]
+
+
+def surge_jobs(rng: np.random.Generator, n: int = 20,
+               quiet_rate: float = 0.05, surge_frac: float = 0.6,
+               surge_width: float = 10.0) -> List[JobSpec]:
+    """ER surge: a quiet Poisson background, then a mass-casualty burst —
+    `surge_frac` of the jobs land inside one `surge_width`-wide window.
+    Bursty arrivals are where naive replanning degrades hardest."""
+    n_surge = int(round(n * surge_frac))
+    background = np.cumsum(rng.exponential(1.0 / quiet_rate,
+                                           size=n - n_surge))
+    t0 = float(rng.uniform(0, max(background[-1], 1.0))) \
+        if len(background) else 0.0
+    burst = t0 + rng.uniform(0, surge_width, size=n_surge)
+    releases = np.sort(np.concatenate([background, burst]))
+    return [_spec_at(rng, i, r) for i, r in enumerate(releases)]
+
+
+def quiet_jobs(rng: np.random.Generator, n: int = 12,
+               rate: float = 0.02) -> List[JobSpec]:
+    """Nightly quiet: sparse arrivals with long gaps — machines usually
+    drain between events, so online should track the clairvoyant optimum
+    closely (competitive ratio near 1)."""
+    releases = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [_spec_at(rng, i, r) for i, r in enumerate(releases)]
+
+
+ONLINE_SCENARIOS = {
+    "poisson": poisson_jobs,
+    "surge": surge_jobs,
+    "quiet": quiet_jobs,
+}

@@ -26,11 +26,12 @@ parity oracle.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
-from typing import Dict, List, Sequence
+from typing import Dict, List, Mapping, Sequence
 
 from repro.core.simulator import (MACHINES, JobSpec, Schedule, ScheduleState,
-                                  simulate)
+                                  machine_free_times, simulate)
 from repro.core.tiers import CC, ED, ES
 
 # above this many jobs, `search` uses the jitted JAX neighbourhood search
@@ -38,37 +39,54 @@ JAX_SEARCH_THRESHOLD = 64
 
 
 # --------------------------------------------------------------- strategies
-def all_on_tier(jobs: Sequence[JobSpec], tier: str) -> Schedule:
-    return simulate(jobs, [tier] * len(jobs))
+def all_on_tier(jobs: Sequence[JobSpec], tier: str,
+                machines_per_tier: Mapping[str, int] | None = None
+                ) -> Schedule:
+    return simulate(jobs, [tier] * len(jobs),
+                    machines_per_tier=machines_per_tier)
 
 
-def per_job_optimal(jobs: Sequence[JobSpec]) -> Schedule:
+def per_job_optimal(jobs: Sequence[JobSpec],
+                    machines_per_tier: Mapping[str, int] | None = None
+                    ) -> Schedule:
     """Table VII row 2: each job on its own Algorithm-1-optimal tier,
     ignoring queueing."""
     assign = [min(MACHINES, key=lambda t: j.response_if_alone(t))
               for j in jobs]
-    return simulate(jobs, assign)
+    return simulate(jobs, assign, machines_per_tier=machines_per_tier)
 
 
 # ------------------------------------------------------------------ greedy
-def greedy_schedule(jobs: Sequence[JobSpec]) -> List[str]:
-    """Initial feasible solution (Algorithm 2 step 1)."""
+def greedy_schedule(jobs: Sequence[JobSpec],
+                    machines_per_tier: Mapping[str, int] | None = None,
+                    busy_until: Mapping[str, Sequence[float]] | None = None
+                    ) -> List[str]:
+    """Initial feasible solution (Algorithm 2 step 1).
+
+    Honors multi-server tiers (earliest-free machine per tier) and
+    machines already busy at the start (``busy_until``, DESIGN.md §7) —
+    the same greedy rule online scheduling commits on each arrival.
+    """
+    mpt = dict(machines_per_tier or {CC: 1, ES: 1})
     order = sorted(range(len(jobs)),
                    key=lambda i: (jobs[i].release, -jobs[i].weight, i))
-    free: Dict[str, float] = {CC: 0.0, ES: 0.0}
+    free = {t: machine_free_times(busy_until, t, mpt.get(t, 1))
+            for t in (CC, ES)}
+    for heap in free.values():
+        heapq.heapify(heap)
     assign: List[str] = [""] * len(jobs)
     for i in order:
         job = jobs[i]
         best_t, best_end = None, float("inf")
         for tier in (ED, ES, CC):    # tie -> prefer lower tier
             arr = job.release + job.trans.get(tier, 0.0)
-            start = arr if tier == ED else max(arr, free[tier])
+            start = arr if tier == ED else max(arr, free[tier][0])
             end = start + job.proc[tier]
             if end < best_end:
                 best_t, best_end = tier, end
         assign[i] = best_t
         if best_t != ED:
-            free[best_t] = best_end
+            heapq.heapreplace(free[best_t], best_end)
     return assign
 
 
@@ -76,7 +94,10 @@ def greedy_schedule(jobs: Sequence[JobSpec]) -> List[str]:
 def neighborhood_search(jobs: Sequence[JobSpec],
                         initial: Sequence[str] | None = None,
                         max_count: int = 50,
-                        objective: str = "weighted") -> Schedule:
+                        objective: str = "weighted",
+                        machines_per_tier: Mapping[str, int] | None = None,
+                        busy_until: Mapping[str, Sequence[float]] | None = None
+                        ) -> Schedule:
     """Paper Algorithm 2. objective: "weighted" (eq. 5) | "unweighted".
 
     Each candidate move is scored incrementally (only the two affected
@@ -84,9 +105,15 @@ def neighborhood_search(jobs: Sequence[JobSpec],
     re-derived from the committed state after every accepted move — no
     running ``best -= v_max`` accumulator, so no float drift over long
     searches.
+
+    machines_per_tier / busy_until describe the fleet the schedule will
+    actually run on (multi-server tiers, machines pre-occupied by committed
+    jobs) — the searched objective IS the commit objective (DESIGN.md §7).
     """
-    assign = list(initial or greedy_schedule(jobs))
-    state = ScheduleState(jobs, assign)
+    assign = list(initial or greedy_schedule(
+        jobs, machines_per_tier=machines_per_tier, busy_until=busy_until))
+    state = ScheduleState(jobs, assign, machines_per_tier=machines_per_tier,
+                          busy_until=busy_until)
     best = state.score(objective)
     for _ in range(max_count):
         tabu_job = [False] * len(jobs)
@@ -166,7 +193,10 @@ def search(jobs: Sequence[JobSpec],
            initial: Sequence[str] | None = None,
            max_count: int = 50,
            objective: str = "weighted",
-           jax_threshold: int | None = None) -> Schedule:
+           jax_threshold: int | None = None,
+           machines_per_tier: Mapping[str, int] | None = None,
+           busy_until: Mapping[str, Sequence[float]] | None = None
+           ) -> Schedule:
     """Size-dispatched Algorithm 2: the incremental Python tabu search for
     small instances, the fully jitted JAX neighbourhood search (one
     vmapped n x 3 neighbourhood evaluation per round inside lax.while_loop,
@@ -177,6 +207,10 @@ def search(jobs: Sequence[JobSpec],
     never on CPU — there the incremental Python search is faster at every
     scale we measured (DESIGN.md §3.3, benchmarks/scheduler_scale.py). Pass
     an explicit threshold to force the JAX path regardless of backend.
+
+    machines_per_tier / busy_until (DESIGN.md §7) are threaded through
+    whichever backend runs, so both search the problem the schedule will
+    actually be committed against.
     """
     n = len(jobs)
     if jax_threshold is None:
@@ -185,13 +219,23 @@ def search(jobs: Sequence[JobSpec],
         use_jax = n > jax_threshold
     if not use_jax:
         return neighborhood_search(jobs, initial=initial,
-                                   max_count=max_count, objective=objective)
+                                   max_count=max_count, objective=objective,
+                                   machines_per_tier=machines_per_tier,
+                                   busy_until=busy_until)
     from repro.core import scheduler_jax   # lazy: keep jax off small paths
-    assign0 = initial or greedy_schedule(jobs)
+    assign0 = initial or greedy_schedule(
+        jobs, machines_per_tier=machines_per_tier, busy_until=busy_until)
+    mpt = dict(machines_per_tier or {})
+    mpt_jax = (int(mpt.get(CC, 1)), int(mpt.get(ES, 1)))
+    busy_jax = tuple(machine_free_times(busy_until, t, m)
+                     for t, m in zip((CC, ES), mpt_jax))
     _, best_a = scheduler_jax.tabu_search_jax(
         jobs, initial=[MACHINES.index(t) for t in assign0],
-        max_rounds=max(max_count, 1) * len(jobs), objective=objective)
-    return simulate(jobs, [MACHINES[int(m)] for m in best_a])
+        max_rounds=max(max_count, 1) * len(jobs), objective=objective,
+        machines_per_tier=mpt_jax, busy_until=busy_jax)
+    return simulate(jobs, [MACHINES[int(m)] for m in best_a],
+                    machines_per_tier=machines_per_tier,
+                    busy_until=busy_until)
 
 
 def _accelerator_backend() -> bool:
@@ -204,14 +248,18 @@ def _accelerator_backend() -> bool:
 
 # ------------------------------------------------------------- exact optimum
 def exact_optimum(jobs: Sequence[JobSpec],
-                  objective: str = "weighted") -> Schedule:
+                  objective: str = "weighted",
+                  machines_per_tier: Mapping[str, int] | None = None,
+                  busy_until: Mapping[str, Sequence[float]] | None = None
+                  ) -> Schedule:
     """Brute-force over all 3^n assignments (n <= ~12). The paper offers no
     optimality baseline; we use this to report the heuristic's gap."""
     n = len(jobs)
     assert n <= 12, "use scheduler_jax.exact_optimum_jax for larger n"
     best_s, best_v = None, float("inf")
     for combo in itertools.product(MACHINES, repeat=n):
-        s = simulate(jobs, combo)
+        s = simulate(jobs, combo, machines_per_tier=machines_per_tier,
+                     busy_until=busy_until)
         v = s.weighted_sum if objective == "weighted" else s.unweighted_sum
         if v < best_v:
             best_s, best_v = s, v
@@ -220,14 +268,19 @@ def exact_optimum(jobs: Sequence[JobSpec],
 
 # -------------------------------------------------------------- comparison
 def strategy_table(jobs: Sequence[JobSpec],
-                   jax_threshold: int | None = None) -> Dict[str, Schedule]:
+                   jax_threshold: int | None = None,
+                   machines_per_tier: Mapping[str, int] | None = None
+                   ) -> Dict[str, Schedule]:
     """The paper's Table VII comparison set + our extras. "ours" goes
     through the size-dispatched `search`, so fleet-scale tables use the
-    jitted path."""
+    jitted path. machines_per_tier (from TierSpec.machines) sizes the
+    shared tiers for every strategy."""
+    mpt = machines_per_tier
     return {
-        "ours (algorithm 2)": search(jobs, jax_threshold=jax_threshold),
-        "per-job optimal layer": per_job_optimal(jobs),
-        "all cloud": all_on_tier(jobs, CC),
-        "all edge": all_on_tier(jobs, ES),
-        "all device": all_on_tier(jobs, ED),
+        "ours (algorithm 2)": search(jobs, jax_threshold=jax_threshold,
+                                     machines_per_tier=mpt),
+        "per-job optimal layer": per_job_optimal(jobs, machines_per_tier=mpt),
+        "all cloud": all_on_tier(jobs, CC, machines_per_tier=mpt),
+        "all edge": all_on_tier(jobs, ES, machines_per_tier=mpt),
+        "all device": all_on_tier(jobs, ED, machines_per_tier=mpt),
     }

@@ -66,19 +66,22 @@ def _tier_setup(rel, proc, trans, m: int):
     return order, arr[order], proc[:, m][order]
 
 
-def _shared_ends_single(mask_s, arr_s, p_s):
+def _shared_ends_single(mask_s, arr_s, p_s, free0):
     """Completion times on a 1-machine tier, in queue order, via parallel
-    prefix ops (no sequential scan): e = cummax(arr - P_prev) + P."""
+    prefix ops (no sequential scan): e = max(cummax(arr - P_prev), free0)
+    + P. ``free0`` is the machine's initial free time (busy_until folded
+    into the prefix as the virtual element before the first job)."""
     p_eff = jnp.where(mask_s, p_s, 0.0)
     csum = jnp.cumsum(p_eff)
     q = jnp.where(mask_s, arr_s, -jnp.inf) - (csum - p_eff)
-    e = jax.lax.cummax(q) + csum
+    e = jnp.maximum(jax.lax.cummax(q), free0) + csum
     return jnp.where(mask_s, e, 0.0)
 
 
-def _shared_ends_multi(mask_s, arr_s, p_s, cnt: int):
-    """cnt-machine tier: FIFO dispatch to the earliest-free machine (the
-    vectorised analogue of the simulator's free-time heap)."""
+def _shared_ends_multi(mask_s, arr_s, p_s, busy):
+    """Multi-machine tier: FIFO dispatch to the earliest-free machine (the
+    vectorised analogue of the simulator's free-time heap). ``busy`` is the
+    (cnt,) vector of initial machine free times (zeros when idle)."""
 
     def step(free, x):
         valid, arr, p = x
@@ -88,27 +91,46 @@ def _shared_ends_multi(mask_s, arr_s, p_s, cnt: int):
         return (jnp.where(valid, free.at[slot].set(e), free),
                 jnp.where(valid, e, 0.0))
 
-    _, ends = jax.lax.scan(step, jnp.zeros((cnt,), arr_s.dtype),
+    _, ends = jax.lax.scan(step, busy.astype(arr_s.dtype),
                            (mask_s, arr_s, p_s))
     return ends
 
 
-def _make_eval(rel, w, proc, trans, machines_per_tier: Tuple[int, int]):
+def _normalize_busy(busy_until, machines_per_tier: Tuple[int, int]):
+    """-> ((m_cloud,), (m_edge,)) float32 arrays of initial machine free
+    times, sorted, zero-padded to the machine count. Accepts None or a
+    (cloud_times, edge_times) pair with <= machine entries per tier."""
+    busy_until = busy_until or ((), ())
+    out = []
+    for vals, m in zip(busy_until, machines_per_tier):
+        v = sorted(float(x) for x in np.asarray(vals).reshape(-1))
+        assert len(v) <= m, f"busy_until lists {len(v)} occupied machines " \
+                            f"for a {m}-machine tier"
+        out.append(jnp.asarray([0.0] * (m - len(v)) + v, jnp.float32))
+    return tuple(out)
+
+
+def _make_eval(rel, w, proc, trans, machines_per_tier: Tuple[int, int],
+               busy_until=None):
     """-> eval_one(a) computing {weighted, unweighted, last} for one
     assignment vector; the per-tier sorts are hoisted out so they run once
-    per instance, not per candidate."""
+    per instance, not per candidate. busy_until: optional (cloud, edge)
+    initial machine free-time arrays (see _normalize_busy)."""
     setups = [_tier_setup(rel, proc, trans, m) for m in (0, 1)]
     dev_end = rel + trans[:, 2] + proc[:, 2]
+    if busy_until is None:
+        busy_until = tuple(jnp.zeros((m,), jnp.float32)
+                           for m in machines_per_tier)
 
     def eval_one(a):
         end = jnp.where(a == 2, dev_end, 0.0)       # private device tier
-        for m, (order, arr_s, p_s), cnt in zip(
-                (0, 1), setups, machines_per_tier):
+        for m, (order, arr_s, p_s), cnt, busy in zip(
+                (0, 1), setups, machines_per_tier, busy_until):
             mask_s = (a == m)[order]
             if cnt == 1:
-                e_s = _shared_ends_single(mask_s, arr_s, p_s)
+                e_s = _shared_ends_single(mask_s, arr_s, p_s, busy[0])
             else:
-                e_s = _shared_ends_multi(mask_s, arr_s, p_s, cnt)
+                e_s = _shared_ends_multi(mask_s, arr_s, p_s, busy)
             end = end.at[order].add(e_s)
         resp = end - rel
         return {"weighted": jnp.sum(w * resp),
@@ -119,19 +141,32 @@ def _make_eval(rel, w, proc, trans, machines_per_tier: Tuple[int, int]):
 
 
 @functools.partial(jax.jit, static_argnames=("machines_per_tier",))
+def _evaluate_assignments_jit(assign, rel, w, proc, trans, busy_until,
+                              machines_per_tier: Tuple[int, int]):
+    return jax.vmap(_make_eval(rel, w, proc, trans, machines_per_tier,
+                               busy_until))(assign)
+
+
 def evaluate_assignments(assign, rel, w, proc, trans,
-                         machines_per_tier: Tuple[int, int] = (1, 1)):
+                         machines_per_tier: Tuple[int, int] = (1, 1),
+                         busy_until=None):
     """assign: (A, n) int32 in {0, 1, 2}. Returns dict of (A,) metrics.
 
     machines_per_tier: static (cloud, edge) shared-machine counts — the
     vectorised analogue of `simulate(..., machines_per_tier=...)`.
+    busy_until: optional (cloud_times, edge_times) initial machine free
+    times (the analogue of `simulate(..., busy_until=...)`); traced, so
+    replans with changing availability reuse the same compiled kernel.
     """
-    return jax.vmap(_make_eval(rel, w, proc, trans, machines_per_tier))(
-        assign)
+    busy = _normalize_busy(busy_until, machines_per_tier)
+    return _evaluate_assignments_jit(assign, rel, w, proc, trans, busy,
+                                     machines_per_tier)
 
 
 def exact_optimum_jax(jobs: Sequence[JobSpec], objective: str = "weighted",
-                      batch: int = 65536):
+                      batch: int = 65536,
+                      machines_per_tier: Tuple[int, int] = (1, 1),
+                      busy_until=None):
     """Enumerate all 3^n assignments on-device. Practical to n ~ 14."""
     n = len(jobs)
     rel, w, proc, trans = specs_to_arrays(jobs)
@@ -142,7 +177,9 @@ def exact_optimum_jax(jobs: Sequence[JobSpec], objective: str = "weighted",
         codes = np.arange(lo, min(lo + batch, total))
         assign = jnp.asarray((codes[:, None] // powers[None]) % N_MACHINES,
                              jnp.int32)
-        m = evaluate_assignments(assign, rel, w, proc, trans)
+        m = evaluate_assignments(assign, rel, w, proc, trans,
+                                 machines_per_tier=machines_per_tier,
+                                 busy_until=busy_until)
         vals = np.asarray(m[objective])
         i = int(np.argmin(vals))
         if vals[i] < best_v:
@@ -153,7 +190,7 @@ def exact_optimum_jax(jobs: Sequence[JobSpec], objective: str = "weighted",
 # ----------------------------------------------- fully-jitted tabu search
 @functools.partial(jax.jit,
                    static_argnames=("objective", "machines_per_tier"))
-def _tabu_run(assign0, rel, w, proc, trans, max_rounds,
+def _tabu_run(assign0, rel, w, proc, trans, max_rounds, busy_until,
               objective: str, machines_per_tier: Tuple[int, int]):
     """Steepest-descent over the n x 3 single-move neighbourhood, entirely
     on-device: one vmapped neighbourhood evaluation per while_loop round,
@@ -162,7 +199,7 @@ def _tabu_run(assign0, rel, w, proc, trans, max_rounds,
     fresh candidate evaluation every round — no accumulator drift by
     construction."""
     n = assign0.shape[0]
-    eval_one = _make_eval(rel, w, proc, trans, machines_per_tier)
+    eval_one = _make_eval(rel, w, proc, trans, machines_per_tier, busy_until)
     job_idx = jnp.repeat(jnp.arange(n), N_MACHINES)     # (3n,)
     mach = jnp.tile(jnp.arange(N_MACHINES), n)          # (3n,)
 
@@ -194,7 +231,8 @@ def tabu_search_jax(jobs: Sequence[JobSpec],
                     initial: Sequence[int] | np.ndarray | None = None,
                     *, max_rounds: int | None = None,
                     objective: str = "weighted",
-                    machines_per_tier: Tuple[int, int] = (1, 1)):
+                    machines_per_tier: Tuple[int, int] = (1, 1),
+                    busy_until=None):
     """Fully-jitted Algorithm-2 neighbourhood search. Returns
     (best objective value, best assignment as an (n,) int array).
 
@@ -204,19 +242,30 @@ def tabu_search_jax(jobs: Sequence[JobSpec],
     lax.while_loop; the only transfer is the final result. Each accepted
     move strictly improves the objective, so the search terminates at a
     1-move local optimum of the same neighbourhood the Python tabu search
-    explores."""
+    explores.
+
+    busy_until: optional (cloud_times, edge_times) initial machine free
+    times — online replans pass the committed fleet state here, so the
+    searched objective is the commit objective (DESIGN.md §7). Traced, so
+    successive replans hit the same compiled search."""
     n = len(jobs)
     rel, w, proc, trans = specs_to_arrays(jobs)
+    busy = _normalize_busy(busy_until, machines_per_tier)
     if initial is None:
         from repro.core import scheduler                   # no import cycle:
         from repro.core.simulator import MACHINES          # scheduler lazy-
         initial = [MACHINES.index(t)                       # loads this module
-                   for t in scheduler.greedy_schedule(jobs)]
+                   for t in scheduler.greedy_schedule(
+                       jobs,
+                       machines_per_tier={CC: machines_per_tier[0],
+                                          ES: machines_per_tier[1]},
+                       busy_until={CC: np.asarray(busy[0]),
+                                   ES: np.asarray(busy[1])})]
     assign0 = jnp.asarray(initial, jnp.int32)
     if max_rounds is None:
         max_rounds = 50 * n
     assign, best_v, _ = _tabu_run(assign0, rel, w, proc, trans,
-                                  jnp.int32(max_rounds), objective,
+                                  jnp.int32(max_rounds), busy, objective,
                                   machines_per_tier)
     return float(best_v), np.asarray(assign)
 

@@ -9,6 +9,9 @@ see DESIGN.md §1):
   * the device tier is private — every job has its own end device, so
     device jobs never queue (paper Section V.A)
   * response of job i = E_i - R_i, weighted by priority w_i (eq. 5)
+  * shared machines may start busy: ``busy_until`` gives each machine's
+    initial free time (DESIGN.md §7 — online replanning scores candidate
+    schedules against machines already occupied by committed jobs)
 """
 from __future__ import annotations
 
@@ -34,6 +37,8 @@ class JobSpec:
     weight: float
     proc: Mapping[str, float]        # tier -> I_i
     trans: Mapping[str, float]       # tier -> D_i (device: 0)
+    workload: str = ""               # originating workload (serving maps
+                                     # schedule entries back to engines)
 
     def response_if_alone(self, tier: str) -> float:
         return self.proc[tier] + self.trans[tier]
@@ -63,9 +68,31 @@ class Schedule:
         return [e.machine for e in self.entries]
 
 
+def machine_free_times(busy_until: Mapping[str, Sequence[float]] | None,
+                       tier: str, machines: int) -> List[float]:
+    """Initial per-machine free times for a shared tier, sorted ascending.
+
+    ``busy_until[tier]`` may list fewer entries than there are machines —
+    the rest start idle (free at t=0). More entries than machines is a
+    caller bug (a tier cannot be running more jobs than it has servers).
+    """
+    vals = sorted(float(v) for v in (busy_until or {}).get(tier, ()))
+    assert len(vals) <= machines, \
+        f"busy_until[{tier!r}] lists {len(vals)} occupied machines " \
+        f"but the tier has only {machines}"
+    return [0.0] * (machines - len(vals)) + vals
+
+
 def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
-             machines_per_tier: Mapping[str, int] | None = None) -> Schedule:
-    """Evaluate a fixed job->tier assignment under the C1-C5 semantics."""
+             machines_per_tier: Mapping[str, int] | None = None,
+             busy_until: Mapping[str, Sequence[float]] | None = None
+             ) -> Schedule:
+    """Evaluate a fixed job->tier assignment under the C1-C5 semantics.
+
+    busy_until: optional {tier: [machine free times]} — shared machines
+    already occupied by previously committed jobs (DESIGN.md §7). A job
+    cannot start on a machine before that machine's entry.
+    """
     assert len(jobs) == len(assignment)
     machines_per_tier = machines_per_tier or {CC: 1, ES: 1}
     entries: List[ScheduledJob | None] = [None] * len(jobs)
@@ -83,7 +110,8 @@ def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
             (i for i, t in enumerate(assignment) if t == tier),
             key=lambda i: (jobs[i].release + jobs[i].trans[tier],
                            jobs[i].release, i))
-        free = [0.0] * machines_per_tier.get(tier, 1)
+        free = machine_free_times(busy_until, tier,
+                                  machines_per_tier.get(tier, 1))
         heapq.heapify(free)
         for i in queue:
             job = jobs[i]
@@ -128,11 +156,15 @@ class ScheduleState:
     """
 
     def __init__(self, jobs: Sequence[JobSpec], assignment: Sequence[str],
-                 machines_per_tier: Mapping[str, int] | None = None):
+                 machines_per_tier: Mapping[str, int] | None = None,
+                 busy_until: Mapping[str, Sequence[float]] | None = None):
         assert len(jobs) == len(assignment)
         self.jobs = list(jobs)
         self.assign = list(assignment)
         self.machines = dict(machines_per_tier or {CC: 1, ES: 1})
+        self.busy = {t: tuple(machine_free_times(busy_until, t,
+                                                 self.machines.get(t, 1)))
+                     for t in _SHARED}
         n = len(self.jobs)
         self.end: List[float] = [0.0] * n
         # per-job constants: releases, weights, per-tier proc, FIFO keys,
@@ -182,11 +214,12 @@ class ScheduleState:
         """
         rel, wgt, proc = self._rel, self._w, self._proc[tier]
         m = self.machines.get(tier, 1)
+        busy = self.busy[tier]
         ends: List[float] = []
         append = ends.append
         w = u = last = 0.0
         if m == 1:
-            free = 0.0
+            free = busy[0]
             for key, i in members:
                 arr = key[0]
                 start = arr if arr > free else free
@@ -197,7 +230,8 @@ class ScheduleState:
                 u += resp
             last = free if ends else 0.0
         else:
-            heap = [0.0] * m
+            heap = list(busy)
+            heapq.heapify(heap)
             for key, i in members:
                 arr = key[0]
                 avail = heapq.heappop(heap)
@@ -298,4 +332,5 @@ class ScheduleState:
         """Exact Schedule for the current assignment (via ``simulate``, so
         reported sums match the reference evaluator bit-for-bit)."""
         return simulate(self.jobs, self.assign,
-                        machines_per_tier=self.machines)
+                        machines_per_tier=self.machines,
+                        busy_until=self.busy)

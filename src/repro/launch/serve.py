@@ -15,6 +15,8 @@ four baseline strategies.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import zlib
 
 import jax
 import numpy as np
@@ -60,23 +62,34 @@ def make_jobs(rng, patients: int, horizon: float):
                       unit_bytes=icu.record_bytes(wl_cfg),
                       priority=wl_cfg.priority)
         jobs.append(Job(workload=wl, size=size,
-                        release=float(rng.integers(0, max(1, int(horizon)))),
+                        release=float(rng.uniform(0, horizon)),
                         name=f"patient{pid}-{wl_cfg.name.split('-')[0]}"))
     return jobs
 
 
 def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
-        execute=True, quantum=None, verbose=True, jax_threshold=None):
+        execute=True, quantum=None, verbose=True, jax_threshold=None,
+        cloud_machines=None, edge_machines=None):
     """jax_threshold: fleets larger than this replan on the jitted JAX
-    search (scheduler.search dispatch; default auto — accelerator only)."""
+    search (scheduler.search dispatch; default auto — accelerator only).
+    cloud_machines / edge_machines: override the shared-server count of a
+    tier (TierSpec.machines is honored by every strategy)."""
     rng = np.random.default_rng(seed)
     tiers = paper_tiers() if tiers_kind == "paper" else tpu_tiers()
+    for tid, count in ((CC, cloud_machines), (ES, edge_machines)):
+        if count is not None:
+            tiers[tid] = dataclasses.replace(tiers[tid], machines=count)
+    machines_per_tier = {tid: t.machines for tid, t in tiers.items()
+                         if not t.private}
 
-    # real models + engines (the compute that actually runs)
+    # real models + engines (the compute that actually runs); keys are
+    # stable across processes (crc32, not PYTHONHASHSEED-salted hash()),
+    # so --seed really reproduces a run
     engines = {}
     for wl_cfg in ICU_WORKLOADS:
         model = ICULSTM(wl_cfg)
-        params = model.init(jax.random.PRNGKey(hash(wl_cfg.name) % 2**31))
+        key = jax.random.PRNGKey(zlib.crc32(wl_cfg.name.encode()))
+        params = model.init(key)
         engines[wl_cfg] = ClassifierEngine(model, params)
 
     cost_model = calibrate(tiers, engines)
@@ -85,7 +98,8 @@ def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
         min(cost_model.times(j)[t][1] for t in tiers) for j in jobs)
     specs = jobs_to_specs(cost_model, jobs, normalize=quantum)
 
-    table = scheduler.strategy_table(specs, jax_threshold=jax_threshold)
+    table = scheduler.strategy_table(specs, jax_threshold=jax_threshold,
+                                     machines_per_tier=machines_per_tier)
     lb = paper_lower_bound(specs)
     results = {}
     if verbose:
@@ -104,9 +118,9 @@ def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
         if verbose:
             print("\nexecuting our schedule (real LSTM inference per job):")
         for entry in sorted(ours.entries, key=lambda e: e.start):
-            # map back to the workload by the name suffix
+            # the spec carries its workload name (no display-string parsing)
             wl_cfg = next(w for w in ICU_WORKLOADS
-                          if entry.job.name.endswith(w.name.split("-")[0]))
+                          if w.name == entry.job.workload)
             x, _ = icu.generate(wl_cfg, 8, seed=int(entry.start) + 1)
             _, seconds = engines[wl_cfg].infer(jax.numpy.asarray(x))
             if verbose:
@@ -126,10 +140,16 @@ def main():
     ap.add_argument("--jax-threshold", type=int, default=None,
                     help="force the jitted JAX search above this many jobs "
                          "(default: auto — accelerator backends only)")
+    ap.add_argument("--cloud-machines", type=int, default=None,
+                    help="shared cloud servers (default: TierSpec.machines)")
+    ap.add_argument("--edge-machines", type=int, default=None,
+                    help="shared edge servers (default: TierSpec.machines)")
     args = ap.parse_args()
     run(patients=args.patients, horizon=args.horizon, seed=args.seed,
         tiers_kind=args.tiers, execute=not args.no_execute,
-        jax_threshold=args.jax_threshold)
+        jax_threshold=args.jax_threshold,
+        cloud_machines=args.cloud_machines,
+        edge_machines=args.edge_machines)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,210 @@
+"""Machine-availability (busy_until) semantics across all three evaluator
+layers (DESIGN.md §7): the reference simulator, the incremental
+ScheduleState, and the JAX batched evaluator must agree when shared
+machines start occupied, on single- and multi-server fleets."""
+import numpy as np
+import pytest
+
+from prop import sweep
+from repro.core import scheduler, scheduler_jax
+from repro.core.lower_bound import (jobwise_last_bound, load_lower_bound,
+                                    paper_lower_bound)
+from repro.core.problems import table6_jobs
+from repro.core.simulator import (MACHINES, JobSpec, ScheduleState,
+                                  machine_free_times, simulate)
+from repro.core.tiers import CC, ED, ES
+
+MPT_GRID = ((1, 1), (2, 3))
+
+
+def _random_jobs(rng, n):
+    return [JobSpec(name=f"J{i}", release=float(rng.integers(0, 30)),
+                    weight=float(rng.integers(1, 4)),
+                    proc={t: float(rng.integers(1, 30)) for t in MACHINES},
+                    trans={CC: float(rng.integers(0, 60)),
+                           ES: float(rng.integers(0, 15)), ED: 0.0})
+            for i in range(n)]
+
+
+def _random_busy(rng, mpt):
+    """Random machine free times; some machines idle (0), some deep busy."""
+    return {t: sorted(float(rng.choice([0.0, rng.integers(1, 40)]))
+                      for _ in range(m))
+            for t, m in ((CC, mpt[0]), (ES, mpt[1]))}
+
+
+def _assert_triple_parity(jobs, assigns, mpt, busy):
+    mptd = {CC: mpt[0], ES: mpt[1]}
+    busy_jax = (busy[CC], busy[ES])
+    rel, w, proc, trans = scheduler_jax.specs_to_arrays(jobs)
+    m = scheduler_jax.evaluate_assignments(
+        assigns, rel, w, proc, trans, machines_per_tier=mpt,
+        busy_until=busy_jax)
+    for ai in range(assigns.shape[0]):
+        a = [MACHINES[j] for j in assigns[ai]]
+        s = simulate(jobs, a, machines_per_tier=mptd, busy_until=busy)
+        st = ScheduleState(jobs, a, machines_per_tier=mptd, busy_until=busy)
+        # reference == incremental, exactly
+        assert abs(st.score("weighted") - s.weighted_sum) < 1e-9
+        assert abs(st.score("unweighted") - s.unweighted_sum) < 1e-9
+        assert abs(st.score("last") - s.last_end) < 1e-9
+        for e in s.entries:
+            assert abs(st.end[jobs.index(e.job)] - e.end) < 1e-9
+        # reference == JAX (float32) within tolerance
+        assert abs(float(m["weighted"][ai]) - s.weighted_sum) < 1e-2
+        assert abs(float(m["unweighted"][ai]) - s.unweighted_sum) < 1e-2
+        assert abs(float(m["last"][ai]) - s.last_end) < 1e-2
+
+
+class TestBusyUntilParity:
+    """simulate(busy_until=...) == ScheduleState(busy_until=...) == JAX."""
+
+    def test_parity_small(self):
+        def check(rng):
+            jobs = _random_jobs(rng, int(rng.integers(3, 8)))
+            for mpt in MPT_GRID:
+                busy = _random_busy(rng, mpt)
+                assigns = rng.integers(0, 3, size=(4, len(jobs))).astype(
+                    np.int32)
+                _assert_triple_parity(jobs, assigns, mpt, busy)
+        sweep(check, n_cases=6)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("n,mpt,cases", [
+        (6, (1, 1), 20), (6, (2, 3), 20),
+        (10, (1, 1), 15), (10, (2, 3), 15),
+    ])
+    def test_parity_sweep(self, n, mpt, cases):
+        for case in range(cases):
+            rng = np.random.default_rng(hash((n, mpt)) % (2 ** 31) + case)
+            jobs = _random_jobs(rng, n)
+            busy = _random_busy(rng, mpt)
+            assigns = rng.integers(0, 3, size=(8, n)).astype(np.int32)
+            _assert_triple_parity(jobs, assigns, mpt, busy)
+
+    def test_incremental_moves_with_busy(self):
+        """try_move/apply_move stay exact against re-simulation when the
+        fleet starts occupied."""
+        for seed in range(10):
+            rng = np.random.default_rng(seed)
+            jobs = _random_jobs(rng, 8)
+            mptd = {CC: 2, ES: 3}
+            busy = {CC: [5.0, 17.0], ES: [0.0, 3.0, 21.0]}
+            st = ScheduleState(jobs, [MACHINES[j]
+                                      for j in rng.integers(0, 3, 8)],
+                               machines_per_tier=mptd, busy_until=busy)
+            for _ in range(12):
+                k = int(rng.integers(0, 8))
+                dst = MACHINES[int(rng.integers(0, 3))]
+                pred = st.try_move(k, dst, "weighted")
+                st.apply_move(k, dst)
+                ref = simulate(jobs, st.assign, machines_per_tier=mptd,
+                               busy_until=busy)
+                assert abs(pred - ref.weighted_sum) < 1e-6
+                assert abs(st.score("weighted") - ref.weighted_sum) < 1e-9
+
+
+class TestBusyUntilSemantics:
+    def test_no_start_before_machine_free(self):
+        """With every machine on a tier busy until B, nothing starts
+        before B there."""
+        jobs = _random_jobs(np.random.default_rng(0), 6)
+        B = 100.0
+        busy = {CC: [B, B], ES: [B]}
+        s = simulate(jobs, [CC, CC, CC, ES, ES, ES],
+                     machines_per_tier={CC: 2, ES: 1}, busy_until=busy)
+        for e in s.entries:
+            assert e.start >= B
+
+    def test_partial_fleet_busy(self):
+        """One idle machine out of two: the first job runs immediately,
+        queueing resumes only when the busy machine matters."""
+        jobs = [JobSpec(name=f"J{i}", release=0.0, weight=1.0,
+                        proc={CC: 10.0, ES: 10.0, ED: 99.0},
+                        trans={CC: 0.0, ES: 0.0, ED: 0.0})
+                for i in range(2)]
+        s = simulate(jobs, [CC, CC], machines_per_tier={CC: 2, ES: 1},
+                     busy_until={CC: [0.0, 50.0]})
+        starts = sorted(e.start for e in s.entries)
+        assert starts == [0.0, 10.0]    # both fit on the idle machine
+
+    def test_machine_free_times_validates(self):
+        assert machine_free_times(None, CC, 2) == [0.0, 0.0]
+        assert machine_free_times({CC: [7.0]}, CC, 2) == [0.0, 7.0]
+        with pytest.raises(AssertionError):
+            machine_free_times({CC: [1.0, 2.0, 3.0]}, CC, 2)
+
+    def test_greedy_respects_busy_and_fleet(self):
+        """greedy_schedule's claimed completion matches the simulator's
+        on the schedule it builds, busy fleet included."""
+        def check(rng):
+            jobs = _random_jobs(rng, 8)
+            mpt = {CC: 2, ES: 2}
+            busy = {CC: [9.0, 0.0], ES: [4.0]}
+            assign = scheduler.greedy_schedule(jobs, machines_per_tier=mpt,
+                                               busy_until=busy)
+            s = simulate(jobs, assign, machines_per_tier=mpt,
+                         busy_until=busy)
+            for e in s.entries:
+                if e.machine == CC:
+                    assert e.start >= 0.0    # idle machine may run at once
+        sweep(check, n_cases=6)
+
+    def test_search_paths_agree_with_busy(self):
+        """Python and JAX search both optimise the constrained problem and
+        return exact schedules scored against it."""
+        jobs = _random_jobs(np.random.default_rng(7), 9)
+        mpt = {CC: 2, ES: 1}
+        busy = {CC: [4.0, 9.0], ES: [2.0]}
+        s_py = scheduler.search(jobs, machines_per_tier=mpt,
+                                busy_until=busy, jax_threshold=100)
+        s_jax = scheduler.search(jobs, machines_per_tier=mpt,
+                                 busy_until=busy, jax_threshold=2)
+        for s in (s_py, s_jax):
+            ref = simulate(jobs, s.assignment(), machines_per_tier=mpt,
+                           busy_until=busy)
+            assert s.weighted_sum == ref.weighted_sum
+        # the search had the busy machines in its objective: with a huge
+        # busy horizon everything shifts off the blocked tier
+        blocked = scheduler.search(
+            jobs, machines_per_tier=mpt,
+            busy_until={CC: [1e6, 1e6], ES: [1e6]}, jax_threshold=100)
+        assert all(t == ED for t in blocked.assignment())
+
+
+# ------------------------------------------------------- load lower bound
+class TestLoadLowerBound:
+    def test_sandwich_on_paper_instance(self):
+        jobs = table6_jobs()
+        opt = scheduler.exact_optimum(jobs, objective="weighted")
+        lb_job = jobwise_last_bound(jobs)
+        lb = load_lower_bound(jobs)
+        assert lb_job <= lb <= opt.last_end + 1e-6
+        # on Table VI the forcing argument is strictly tighter (41 -> 43)
+        assert lb > lb_job
+
+    def test_sandwich_property(self):
+        """jobwise <= load bound <= best last completion over ALL
+        assignments (not just the weighted optimum's)."""
+        import itertools
+
+        def check(rng):
+            jobs = _random_jobs(rng, 5)
+            lb_job = jobwise_last_bound(jobs)
+            lb = load_lower_bound(jobs)
+            best_last = min(
+                simulate(jobs, c).last_end
+                for c in itertools.product(MACHINES, repeat=5))
+            assert lb_job - 1e-9 <= lb <= best_last + 1e-6
+            assert paper_lower_bound(jobs) <= \
+                scheduler.exact_optimum(jobs).weighted_sum + 1e-9
+        sweep(check, n_cases=8)
+
+    def test_multi_machine_fleet_weakens_forcing(self):
+        """More machines can only lower (or keep) the load bound."""
+        def check(rng):
+            jobs = _random_jobs(rng, 6)
+            one = load_lower_bound(jobs, machines_per_tier={CC: 1, ES: 1})
+            many = load_lower_bound(jobs, machines_per_tier={CC: 3, ES: 3})
+            assert many <= one + 1e-9
+        sweep(check, n_cases=8)

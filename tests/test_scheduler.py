@@ -47,9 +47,11 @@ class TestPaperTableVII:
             assert ours.weighted_sum <= strat.weighted_sum
 
     def test_lower_bound_holds(self):
+        from repro.core.lower_bound import jobwise_last_bound
         jobs = table6_jobs()
         opt = scheduler.exact_optimum(jobs, objective="weighted")
         assert paper_lower_bound(jobs) <= opt.weighted_sum
+        assert jobwise_last_bound(jobs) <= load_lower_bound(jobs)
         assert load_lower_bound(jobs) <= opt.last_end + 1e-9
 
 
