@@ -1,0 +1,125 @@
+"""Perf regression gate for the scheduler hot paths.
+
+Runs a fresh `benchmarks/scheduler_scale.py` sweep and compares it against
+the committed floors in BENCH_scheduler.json, the same way tests guard
+correctness: exits nonzero when any guarded metric regresses by more than
+``--tolerance`` (default 30%).
+
+Guarded metrics (all RELATIVE, so they transfer across machine speeds,
+except wards/sec which assumes the committed baseline ran on comparable
+hardware — regenerate the baseline when the CI host changes):
+
+  * head-to-head ``speedup_vs_reference`` per (n, method) — the
+    incremental and jitted searches must stay fast relative to the seed
+    reference implementation;
+  * ``jax_vs_incremental`` per n (derived: incremental seconds / jax
+    seconds) — the delta-evaluated jitted search must not fall back
+    behind the incremental Python path (the PR-3 n=1000 regression fix);
+  * batched ``speedup_batched_vs_sequential`` and
+    ``wards_per_s_batched`` — fleet planning throughput (DESIGN.md §8);
+  * batched ``parity_mismatches`` must be exactly 0 (not a perf floor: the
+    batched search must return the per-instance search's objectives).
+
+Invocation (documented in ROADMAP.md):
+
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        --baseline BENCH_scheduler.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def _head_to_head_metrics(report: dict) -> dict:
+    """-> {metric name: value} of guarded relative head-to-head metrics."""
+    out = {}
+    for row in report.get("head_to_head", ()):
+        n = row["n"]
+        methods = row.get("methods", {})
+        for name, m in methods.items():
+            speed = m.get("speedup_vs_reference")
+            if speed:
+                out[f"n{n}/{name}/speedup_vs_reference"] = speed
+        inc = (methods.get("incremental") or {}).get("seconds")
+        jx = (methods.get("jax") or {}).get("seconds")
+        if inc and jx:
+            out[f"n{n}/jax_vs_incremental"] = inc / jx
+    return out
+
+
+def _batched_metrics(report: dict) -> dict:
+    b = report.get("batched") or {}
+    out = {}
+    for key in ("speedup_batched_vs_sequential", "wards_per_s_batched"):
+        if b.get(key):
+            out[f"batched/{key}"] = b[key]
+    return out
+
+
+def compare(committed: dict, fresh: dict, tolerance: float = 0.30
+            ) -> list:
+    """-> list of human-readable regression strings (empty == pass).
+
+    A metric regresses when fresh < committed * (1 - tolerance). Metrics
+    present in only one report are skipped (the gate tightens as the
+    committed baseline gains sections, and never blocks on new ones).
+    """
+    problems = []
+    for metrics in (_head_to_head_metrics, _batched_metrics):
+        com, fre = metrics(committed), metrics(fresh)
+        for key, floor in com.items():
+            got = fre.get(key)
+            if got is None:
+                continue
+            if got < floor * (1.0 - tolerance):
+                problems.append(
+                    f"{key}: {got:.3g} < committed {floor:.3g} "
+                    f"- {tolerance:.0%}")
+    mism = (fresh.get("batched") or {}).get("parity_mismatches")
+    if mism:
+        problems.append(f"batched/parity_mismatches: {mism} != 0")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_scheduler.json",
+                    help="committed report with the floors to hold")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional regression (default 0.30)")
+    ap.add_argument("--fresh", default=None,
+                    help="compare an existing report instead of running "
+                         "the benchmark (mainly for tests)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        committed = json.load(f)
+    if args.fresh:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    else:
+        from scheduler_scale import bench_scheduler_scale
+        out = os.path.join(tempfile.mkdtemp(prefix="bench_fresh_"),
+                           "BENCH_scheduler.json")
+        bench_scheduler_scale(out_path=out)
+        with open(out) as f:
+            fresh = json.load(f)
+        print(f"fresh report: {out}")
+
+    problems = compare(committed, fresh, tolerance=args.tolerance)
+    if problems:
+        print("PERF REGRESSION vs committed baseline:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"perf floors held (tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    sys.exit(main())

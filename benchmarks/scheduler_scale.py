@@ -10,12 +10,17 @@ Head-to-head Algorithm-2 implementations (the repo's single hottest path):
     (scheduler_jax.tabu_search_jax), one vmapped n x 3 neighbourhood
     evaluation per lax.while_loop round, no host syncs.
 
-Also: JAX batched-evaluation throughput, heuristic optimality gap, and the
-online (non-clairvoyant) competitive ratio — including, behind ``--online``,
-per-arrival-scenario ratios (poisson steady-state / ER-surge burst /
-nightly-quiet, core.problems.ONLINE_SCENARIOS) on single- and multi-server
-fleets. Results are printed as the harness CSV and written machine-readable
-to BENCH_scheduler.json so the perf trajectory is tracked across PRs.
+Also: JAX batched-evaluation throughput, heuristic optimality gap,
+fleet-scale batched planning throughput in wards/sec (``batched`` section:
+scheduler_jax.tabu_search_batched vs the sequential per-instance
+`scheduler.search` loop, DESIGN.md §8), and the online (non-clairvoyant)
+competitive ratio — including, behind ``--online``, per-arrival-scenario
+ratios (poisson steady-state / ER-surge burst / nightly-quiet,
+core.problems.ONLINE_SCENARIOS) on single- and multi-server fleets, whose
+clairvoyant baselines are planned by one batched call per sweep. Results
+are printed as the harness CSV and written machine-readable to
+BENCH_scheduler.json so the perf trajectory is tracked across PRs —
+benchmarks/check_regression.py gates on those floors.
 """
 from __future__ import annotations
 
@@ -100,8 +105,11 @@ def bench_head_to_head(sizes=(10, 100, 1000), max_count=5):
 
 
 def bench_online_scenarios(seeds=6, n=20):
-    """Competitive ratio (online / clairvoyant-offline, both through the
-    size-dispatched search) per arrival scenario and fleet shape."""
+    """Competitive ratio (online / clairvoyant-offline) per arrival
+    scenario and fleet shape. The clairvoyant baselines for a scenario's
+    whole seed sweep are planned in ONE batched device call
+    (online.competitive_ratio_batch -> scheduler.search_batched), shared
+    by both replan modes."""
     from repro.core import online
     from repro.core.problems import ONLINE_SCENARIOS
 
@@ -110,29 +118,77 @@ def bench_online_scenarios(seeds=6, n=20):
         out[scen] = {}
         for fleet, mpt in (("c1e1", {CC: 1, ES: 1}),
                            ("c2e3", {CC: 2, ES: 3})):
-            ratios = {"greedy": [], "tabu": []}
-            for seed in range(seeds):
-                jobs = gen(np.random.default_rng(1000 + seed), n=n)
-                # one clairvoyant baseline per instance, shared by both
-                # replan modes (the offline search dominates the cost)
-                off = scheduler.search(jobs, machines_per_tier=mpt)
-                for replan in ("greedy", "tabu"):
-                    on = online.online_schedule(jobs, replan=replan,
-                                                machines_per_tier=mpt)
-                    ratios[replan].append(
-                        on.weighted_sum / max(off.weighted_sum, 1e-9))
+            instances = [gen(np.random.default_rng(1000 + seed), n=n)
+                         for seed in range(seeds)]
+            ratios = online.competitive_ratio_batch(
+                instances, replans=("greedy", "tabu"),
+                machines_per_tier=mpt)
             out[scen][fleet] = {
                 replan: {"mean": float(np.mean(r)), "max": float(np.max(r))}
                 for replan, r in ratios.items()}
     return out
 
 
-def bench_scheduler_scale(with_online_scenarios: bool = False):
+def bench_batched(wards=32, n=100, max_count=5, repeats=3):
+    """Fleet-scale planning throughput (wards/sec): one batched device
+    call (tabu_search_batched) vs the sequential per-instance loop the
+    repo used before the batched subsystem existed (`scheduler.search`
+    per ward — on CPU that's the incremental Python path; also timed: a
+    per-instance jitted `tabu_search_jax` loop). Both sides are measured
+    best-of-`repeats` after a warm-up call so jit compiles and load
+    spikes don't skew the ratio. Batched-vs-per-instance disagreements
+    after exact re-simulation are recorded as ``parity_mismatches``
+    (benchmarks/check_regression.py fails on any nonzero value; the test
+    suite's parity sweeps guard the same invariant)."""
+    from repro.core import scheduler_jax
+
+    instances = [_random_jobs(np.random.default_rng(3000 + i), n)
+                 for i in range(wards)]
+    max_rounds = max_count * n
+
+    def _best_of(fn):
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    scheduler_jax.tabu_search_batched(instances, max_rounds=1)   # compile
+    scheduler_jax.tabu_search_jax(instances[0], max_rounds=1)
+    t_batched, (_, assigns_b) = _best_of(
+        lambda: scheduler_jax.tabu_search_batched(
+            instances, max_rounds=max_rounds))
+    t_jax_loop, assigns_s = _best_of(lambda: [
+        scheduler_jax.tabu_search_jax(jobs, max_rounds=max_rounds)[1]
+        for jobs in instances])
+    t_search_loop, _ = _best_of(lambda: [
+        scheduler.search(jobs, max_count=max_count) for jobs in instances])
+
+    # batched == per-instance, re-scored through the exact simulator
+    mismatches = sum(
+        simulate(jobs, [MACHINES[int(i)] for i in ab]).weighted_sum
+        != simulate(jobs, [MACHINES[int(i)] for i in asolo]).weighted_sum
+        for jobs, ab, asolo in zip(instances, assigns_b, assigns_s))
+    return {
+        "wards": wards, "n": n, "max_count": max_count,
+        "seconds_batched": t_batched,
+        "seconds_sequential_search_loop": t_search_loop,
+        "seconds_sequential_jax_loop": t_jax_loop,
+        "wards_per_s_batched": wards / t_batched,
+        "wards_per_s_sequential": wards / t_search_loop,
+        "speedup_batched_vs_sequential": t_search_loop / t_batched,
+        "parity_mismatches": int(mismatches),
+    }
+
+
+def bench_scheduler_scale(with_online_scenarios: bool = False,
+                          out_path: str | None = None):
     rng = np.random.default_rng(0)
     rows, csv = [], []
     report = {"bench": "scheduler_scale", "backend": jax.default_backend(),
               "head_to_head": [], "eval_throughput": {}, "quality": {},
-              "online": {}}
+              "online": {}, "batched": {}}
 
     # 1) Algorithm-2 head-to-head across implementations and scales
     for row in bench_head_to_head():
@@ -170,6 +226,24 @@ def bench_scheduler_scale(with_online_scenarios: bool = False):
             "candidates": 4096, "n": 50, "seconds": dt,
             "candidates_per_s": 4096 / dt}
 
+    # 2b) stochastic-search baseline honors the deployed fleet (the seed
+    # implementation silently scored every candidate on an idle (1, 1)
+    # fleet — regression-guarded by recording the fleet-true objective)
+    jobs = _random_jobs(np.random.default_rng(7), 30)
+    key = jax.random.PRNGKey(0)
+    initial = np.asarray([MACHINES.index(t)
+                          for t in scheduler.greedy_schedule(
+                              jobs, machines_per_tier={CC: 2, ES: 3})],
+                         np.int32)
+    v, a = scheduler_jax.stochastic_search(
+        jobs, key, initial, iters=50, machines_per_tier=(2, 3))
+    exact = simulate(jobs, [MACHINES[int(i)] for i in a],
+                     machines_per_tier={CC: 2, ES: 3})
+    csv.append(f"sched_stochastic_c2e3_n30,0,"
+               f"weighted={exact.weighted_sum:.0f};claimed={v:.0f}")
+    report["quality"]["stochastic_c2e3_n30"] = {
+        "weighted": exact.weighted_sum, "claimed": v}
+
     # 3) heuristic optimality gap on small instances
     gaps = []
     for seed in range(5):
@@ -198,7 +272,19 @@ def bench_scheduler_scale(with_online_scenarios: bool = False):
     report["online"] = {"greedy": float(np.mean(ratios_g)),
                         "tabu_replan": float(np.mean(ratios_t))}
 
-    # 5) per-scenario online competitive ratios (slower; gated by --online)
+    # 5) fleet-scale batched planning throughput (wards/sec)
+    report["batched"] = bench_batched()
+    b = report["batched"]
+    rows.append(("batched_wards", b["wards"], b["seconds_batched"],
+                 b["wards_per_s_batched"]))
+    csv.append(
+        f"sched_batched_B{b['wards']}_n{b['n']},"
+        f"{b['seconds_batched']*1e6:.0f},"
+        f"wards_per_s={b['wards_per_s_batched']:.0f};"
+        f"speedup_vs_sequential={b['speedup_batched_vs_sequential']:.1f}x;"
+        f"parity_mismatches={b['parity_mismatches']}")
+
+    # 6) per-scenario online competitive ratios (slower; gated by --online)
     if with_online_scenarios:
         scen = bench_online_scenarios()
         report["online"]["scenarios"] = scen
@@ -209,9 +295,10 @@ def bench_scheduler_scale(with_online_scenarios: bool = False):
                     f"greedy={ratios['greedy']['mean']:.3f};"
                     f"tabu_replan={ratios['tabu']['mean']:.3f}")
 
-    with open(BENCH_JSON, "w") as f:
+    out_path = out_path or BENCH_JSON
+    with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
-    csv.append(f"# scheduler report written to {BENCH_JSON},0,")
+    csv.append(f"# scheduler report written to {out_path},0,")
     return rows, csv
 
 

@@ -87,8 +87,12 @@ def _busy_vectors(commits: Sequence[_Commit | None], movable: Sequence[int],
         if c.end > now:
             busy[c.machine].append(c.end)
     for tier in _SHARED:
-        assert len(busy[tier]) <= machines_per_tier.get(tier, 1), \
-            f"more running jobs than machines on {tier}"
+        # ValueError, not assert: this guards real caller bugs (commit
+        # bookkeeping gone wrong) and must survive ``python -O``
+        if len(busy[tier]) > machines_per_tier.get(tier, 1):
+            raise ValueError(f"more running jobs than machines on {tier}: "
+                             f"{len(busy[tier])} > "
+                             f"{machines_per_tier.get(tier, 1)}")
     return busy
 
 
@@ -190,3 +194,34 @@ def competitive_ratio(jobs: Sequence[JobSpec], replan: str = "tabu", *,
     offline = scheduler.search(jobs, jax_threshold=jax_threshold,
                                machines_per_tier=machines_per_tier)
     return online.weighted_sum / max(offline.weighted_sum, 1e-9)
+
+
+def competitive_ratio_batch(instances: Sequence[Sequence[JobSpec]],
+                            replans: Sequence[str] = ("greedy", "tabu"), *,
+                            jax_threshold: int | None = None,
+                            machines_per_tier: Mapping[str, int] | None
+                            = None,
+                            min_batch: int | None = None
+                            ) -> Dict[str, List[float]]:
+    """Competitive ratios for a whole sweep of instances, with ONE
+    batched clairvoyant baseline call shared by every replan mode.
+
+    The offline optimum is the expensive side of a ratio sweep — it sees
+    the full instance while the online replanner only ever optimises the
+    visible suffix. `scheduler.search_batched` plans all instances in a
+    single jitted device call (DESIGN.md §8), so the sweep cost is one
+    batched search plus the (inherently event-sequential) online runs.
+
+    Returns {replan mode: [ratio per instance]}."""
+    offline = scheduler.search_batched(
+        list(instances), machines_per_tier=machines_per_tier,
+        min_batch=min_batch)
+    out: Dict[str, List[float]] = {}
+    for replan in replans:
+        out[replan] = [
+            online_schedule(jobs, replan=replan,
+                            jax_threshold=jax_threshold,
+                            machines_per_tier=machines_per_tier)
+            .weighted_sum / max(off.weighted_sum, 1e-9)
+            for jobs, off in zip(instances, offline)]
+    return out

@@ -106,3 +106,17 @@ ONLINE_SCENARIOS = {
     "surge": surge_jobs,
     "quiet": quiet_jobs,
 }
+
+
+def ward_batch(rng: np.random.Generator, wards: int,
+               n_lo: int = 8, n_hi: int = 24,
+               scenario: str = "poisson") -> List[List[JobSpec]]:
+    """B independent ward instances for fleet-scale (batched) planning.
+
+    Ward sizes are drawn uniformly from [n_lo, n_hi] — deliberately
+    mixed, so consumers exercise the batched search's phantom-job padding
+    (DESIGN.md §8). Each ward's arrivals come from the named
+    ONLINE_SCENARIOS generator."""
+    gen = ONLINE_SCENARIOS[scenario]
+    return [gen(rng, n=int(rng.integers(n_lo, n_hi + 1)))
+            for _ in range(wards)]

@@ -37,6 +37,10 @@ from repro.core.tiers import CC, ED, ES
 # above this many jobs, `search` uses the jitted JAX neighbourhood search
 JAX_SEARCH_THRESHOLD = 64
 
+# batches at least this large dispatch to the single-call batched JAX
+# search (DESIGN.md §8); smaller ones loop the per-instance `search`
+BATCHED_SEARCH_MIN_WARDS = 4
+
 
 # --------------------------------------------------------------- strategies
 def all_on_tier(jobs: Sequence[JobSpec], tier: str,
@@ -204,9 +208,14 @@ def search(jobs: Sequence[JobSpec],
 
     jax_threshold: job count above which the JAX path is taken. Default
     (None): JAX_SEARCH_THRESHOLD when an accelerator backend is present,
-    never on CPU — there the incremental Python search is faster at every
-    scale we measured (DESIGN.md §3.3, benchmarks/scheduler_scale.py). Pass
-    an explicit threshold to force the JAX path regardless of backend.
+    never on CPU. Since the delta-evaluation rewrite the jitted search
+    wins on CPU too once compiled (n=100 and n=1000 both, DESIGN.md
+    §3.3), but each new (instance size, fleet) shape pays a multi-second
+    XLA compile — replanning loops see a different size at every event,
+    so the Python path stays the CPU default. Pass an explicit threshold
+    to force the JAX path where shapes repeat (benchmarks, serving, TPU
+    deployments); fleet planning over many wards should use
+    `search_batched`, which amortises one compile across the batch.
 
     machines_per_tier / busy_until (DESIGN.md §7) are threaded through
     whichever backend runs, so both search the problem the schedule will
@@ -236,6 +245,59 @@ def search(jobs: Sequence[JobSpec],
     return simulate(jobs, [MACHINES[int(m)] for m in best_a],
                     machines_per_tier=machines_per_tier,
                     busy_until=busy_until)
+
+
+def search_batched(problems: Sequence[Sequence[JobSpec]],
+                   max_count: int = 50,
+                   objective: str = "weighted",
+                   machines_per_tier=None,
+                   busy_until=None,
+                   min_batch: int | None = None) -> List[Schedule]:
+    """Plan B independent ward instances, one jitted device call
+    (DESIGN.md §8) — the fleet-scale entry point used by
+    `launch/serve.py --wards` and the batched clairvoyant baselines in
+    `core/online.py`.
+
+    problems: B job lists (sizes may differ — padded on the batched
+    path with phantom jobs that contribute exactly 0 to every
+    objective). machines_per_tier: one {tier: count} mapping for every
+    ward or a per-ward sequence of mappings; busy_until: optional
+    per-ward {tier: [free times]} sequence. min_batch: batches smaller
+    than this loop the per-instance `search` instead (default
+    BATCHED_SEARCH_MIN_WARDS — tiny fleets don't amortise a device
+    dispatch); pass 1 to force the batched path, a large value to force
+    the sequential loop.
+
+    Every returned Schedule is a final exact `simulate` of its ward's
+    best assignment against that ward's own fleet, so reported numbers
+    are the reference evaluator's bit-for-bit (§3.1 invariant)."""
+    B = len(problems)
+    single = isinstance(machines_per_tier, Mapping) or machines_per_tier \
+        is None
+    mpts = [machines_per_tier] * B if single else list(machines_per_tier)
+    busys = [None] * B if busy_until is None else list(busy_until)
+    if len(mpts) != B or len(busys) != B:
+        raise ValueError(f"{len(mpts)} fleets / {len(busys)} busy vectors "
+                         f"for {B} wards")
+    threshold = BATCHED_SEARCH_MIN_WARDS if min_batch is None else min_batch
+    if B < threshold:
+        return [search(jobs, max_count=max_count, objective=objective,
+                       machines_per_tier=m, busy_until=b)
+                for jobs, m, b in zip(problems, mpts, busys)]
+    from repro.core import scheduler_jax   # lazy: keep jax off small paths
+    pairs = [(int(dict(m or {}).get(CC, 1)), int(dict(m or {}).get(ES, 1)))
+             for m in mpts]
+    busy_pairs = [tuple(machine_free_times(b, t, mm)
+                        for t, mm in zip((CC, ES), pair))
+                  for b, pair in zip(busys, pairs)]
+    n_max = max((len(jobs) for jobs in problems), default=0)
+    _, assigns = scheduler_jax.tabu_search_batched(
+        problems, max_rounds=max(max_count, 1) * max(n_max, 1),
+        objective=objective, machines_per_tier=pairs,
+        busy_until=busy_pairs)
+    return [simulate(jobs, [MACHINES[int(i)] for i in a],
+                     machines_per_tier=m, busy_until=b)
+            for jobs, a, m, b in zip(problems, assigns, mpts, busys)]
 
 
 def _accelerator_backend() -> bool:

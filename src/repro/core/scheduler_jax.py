@@ -18,9 +18,15 @@ semantics fast to vectorise (DESIGN.md §3.2):
 Used for:
   * exact small-n optimum: enumerate all 3^n assignments in one vmap;
   * `tabu_search_jax`: the fully jitted Algorithm-2 neighbourhood search —
-    every round evaluates the whole n x 3 single-move neighbourhood in one
-    vmap inside a lax.while_loop, so there are NO host<->device round
-    trips until the search terminates;
+    every lax.while_loop round scores the whole n x 3 single-move
+    neighbourhood by DELTA EVALUATION (each candidate re-scores only its
+    two affected tiers; one scan per shared tier yields all n toggled
+    stats — DESIGN.md §3.2), so there are NO host<->device round trips
+    until the search terminates;
+  * `tabu_search_batched`: B independent ward instances searched in ONE
+    device call — variable sizes padded with transparent phantom jobs,
+    mixed fleets padded with +inf-busy phantom machines, per-instance
+    convergence flags (DESIGN.md §8);
   * random-restart stochastic local search (kept for comparison; it syncs
     to NumPy every iteration);
   * jittable evaluation inside the serving engine's control loop.
@@ -46,15 +52,19 @@ from repro.core.tiers import CC, ED, ES
 N_MACHINES = 3
 
 
+def _specs_to_np(jobs: Sequence[JobSpec]):
+    """Host-side (numpy) spec arrays — no device transfers (batch padding
+    assembles B instances without B round trips), one pass over the jobs."""
+    flat = np.asarray(
+        [(j.release, j.weight, j.proc[CC], j.proc[ES], j.proc[ED],
+          j.trans[CC], j.trans[ES], j.trans.get(ED, 0.0)) for j in jobs],
+        np.float32).reshape(-1, 8)
+    return flat[:, 0], flat[:, 1], flat[:, 2:5], flat[:, 5:8]
+
+
 def specs_to_arrays(jobs: Sequence[JobSpec]):
     """-> release (n,), weight (n,), proc (n,3), trans (n,3)."""
-    rel = jnp.asarray([j.release for j in jobs], jnp.float32)
-    w = jnp.asarray([j.weight for j in jobs], jnp.float32)
-    proc = jnp.asarray([[j.proc[CC], j.proc[ES], j.proc[ED]] for j in jobs],
-                       jnp.float32)
-    trans = jnp.asarray([[j.trans[CC], j.trans[ES],
-                          j.trans.get(ED, 0.0)] for j in jobs], jnp.float32)
-    return rel, w, proc, trans
+    return tuple(jnp.asarray(x) for x in _specs_to_np(jobs))
 
 
 def _tier_setup(rel, proc, trans, m: int):
@@ -99,14 +109,18 @@ def _shared_ends_multi(mask_s, arr_s, p_s, busy):
 def _normalize_busy(busy_until, machines_per_tier: Tuple[int, int]):
     """-> ((m_cloud,), (m_edge,)) float32 arrays of initial machine free
     times, sorted, zero-padded to the machine count. Accepts None or a
-    (cloud_times, edge_times) pair with <= machine entries per tier."""
+    (cloud_times, edge_times) pair with <= machine entries per tier.
+
+    Raises ValueError (not assert — guards must survive ``python -O``) when
+    a caller lists more occupied machines than the tier has servers."""
     busy_until = busy_until or ((), ())
     out = []
     for vals, m in zip(busy_until, machines_per_tier):
         v = sorted(float(x) for x in np.asarray(vals).reshape(-1))
-        assert len(v) <= m, f"busy_until lists {len(v)} occupied machines " \
-                            f"for a {m}-machine tier"
-        out.append(jnp.asarray([0.0] * (m - len(v)) + v, jnp.float32))
+        if len(v) > m:
+            raise ValueError(f"busy_until lists {len(v)} occupied machines "
+                             f"for a {m}-machine tier")
+        out.append(np.asarray([0.0] * (m - len(v)) + v, np.float32))
     return tuple(out)
 
 
@@ -187,44 +201,459 @@ def exact_optimum_jax(jobs: Sequence[JobSpec], objective: str = "weighted",
     return best_v, best_a
 
 
-# ----------------------------------------------- fully-jitted tabu search
-@functools.partial(jax.jit,
-                   static_argnames=("objective", "machines_per_tier"))
-def _tabu_run(assign0, rel, w, proc, trans, max_rounds, busy_until,
-              objective: str, machines_per_tier: Tuple[int, int]):
-    """Steepest-descent over the n x 3 single-move neighbourhood, entirely
-    on-device: one vmapped neighbourhood evaluation per while_loop round,
-    accept the best strictly-improving move, stop at a local optimum or
-    after max_rounds moves. The incumbent objective is re-read from the
-    fresh candidate evaluation every round — no accumulator drift by
-    construction."""
-    n = assign0.shape[0]
-    eval_one = _make_eval(rel, w, proc, trans, machines_per_tier, busy_until)
-    job_idx = jnp.repeat(jnp.arange(n), N_MACHINES)     # (3n,)
-    mach = jnp.tile(jnp.arange(N_MACHINES), n)          # (3n,)
+# ------------------------------------- delta-evaluated jitted tabu search
+#
+# DESIGN.md §3.2/§8: a single-move candidate perturbs only its source and
+# destination tiers, so a tabu round never re-evaluates whole assignments.
+# Per round, each shared tier computes the incumbent stat plus all n
+# "toggle job k's membership" stats in ONE scan over the tier's (hoisted)
+# queue order — O(n^2) flops, O(n) memory, no (3n, n) candidate
+# materialisation and no per-candidate cumsum/cummax. Candidate (k, m) is
+# then scored from per-tier scalars: the toggled source stat, the toggled
+# destination stat, and the incumbent's untouched third-tier stat.
 
-    def value(a):
-        return eval_one(a)[objective]
+_OBJ_IDX = {"weighted": 0, "unweighted": 1, "last": 2}
+
+
+def _tier_rounds(mask_T, arr_T, p_T, w_T, rel_T, busy_T, oi: int):
+    """Incumbent + all-n toggled stats of BOTH shared tiers of every
+    instance in one scan.
+
+    Inputs are stacked per-tier queue-order constants, shape (B, 2, n)
+    (and (B, 2, m) machine free times — mixed fleets pad the smaller tier
+    with +inf phantom machines, which FIFO dispatch never selects). Row s
+    of the scan carry tracks the queue with the job at position s toggled
+    (member removed / non-member inserted); row n is the untouched
+    incumbent, so both come from identical arithmetic. Columns walk the
+    queue once, so the whole B-instance 2-tier n-toggle neighbourhood
+    costs one length-n scan whose per-step op count is independent of B
+    and tier count (op dispatch, not flops, bounds CPU throughput — the
+    batch rides along inside each op).
+
+    All-single-server fleets (m == 1, the static shape of busy_T) carry
+    the running cummax of q = arr − P_prev (the §3.2 prefix recurrence);
+    multi-machine fleets carry per-row free-slot vectors (the vectorised
+    free-time heap, start = max(arrival, earliest free) exactly as
+    `simulate`). Returns ((B, 2) incumbent stats, (B, 2, n) toggled
+    stats indexed by queue position)."""
+    B, _, n = mask_T.shape
+    m = busy_T.shape[2]
+    rows = jnp.arange(n + 1)
+
+    def lead(x):                                # (B, 2, n) -> (n, B, 2)
+        return jnp.moveaxis(x, 2, 0)
+
+    if m == 1:
+        p_eff = jnp.where(mask_T, p_T, 0.0)
+        csum = jnp.cumsum(p_eff, axis=2)
+        q = jnp.where(mask_T, arr_T, -jnp.inf) - (csum - p_eff)
+        free0 = busy_T[:, :, :1]                # finite on 1-machine tiers
+        delta = jnp.where(mask_T, -p_T, p_T)    # toggle's suffix p shift
+        q_self = jnp.where(mask_T, -jnp.inf, arr_T - (csum - p_eff))
+        cm = jax.lax.cummax(q, axis=2)          # M_j, the §3.2 prefix max
+        e_inc = jnp.maximum(cm, free0) + csum   # incumbent completions
+        # A toggle at position s leaves the queue prefix untouched and
+        # shifts the suffix cumsum by delta_s, so with
+        # K_s = max(M_{s-1}, q'_s, f0) and G_s = K_s + delta_s the
+        # toggled completion of j > s is
+        #   e'_j = max(K_s, R_{s+1,j} - delta_s) + C_j + delta_s
+        #        = max(G_s, R_{s+1,j}) + C_j
+        # (R = range max of q). Everything but the 2D range max reduces
+        # to O(n) prefix/suffix sums of incumbent quantities.
+        cm_prev = jnp.concatenate(
+            [jnp.full((B, 2, 1), -jnp.inf), cm[:, :, :-1]], axis=2)
+        K = jnp.maximum(jnp.maximum(cm_prev, q_self), free0)
+        G = K + delta
+
+        if oi != 2:
+            wm = jnp.where(mask_T, w_T if oi == 0 else 1.0, 0.0)
+            contrib = wm * (e_inc - rel_T)
+            stat = jnp.sum(contrib, axis=2)
+            cpre = jnp.cumsum(contrib, axis=2)
+            pre = cpre - contrib                       # sum over j < s
+            lin = wm * (csum - rel_T)
+            clin = jnp.cumsum(lin, axis=2)
+            suf_lin = clin[:, :, -1:] - clin           # sum over j > s
+            wpre = jnp.cumsum(wm, axis=2)              # sum over j <= s
+            own = jnp.where(
+                mask_T, 0.0,
+                (w_T if oi == 0 else 1.0) * (G + csum - rel_T))
+            # T_s = sum_{j>s} wm_j max(G_s, R_{s+1,j}): one scan over
+            # queue positions with an O(B n) carry and five small fused
+            # ops per step — no O(n^2) tensors at any instance size. For
+            # j <= s the unmasked accumulator collects wm_j G_s (R is
+            # still -inf there), subtracted afterwards via wpre.
+            jgt = jnp.arange(n)[:, None] > jnp.arange(n)[None, :]
+
+            def step(carry, xs):
+                R, acc = carry                         # (B, 2, n) each
+                q_j, wm_j, g_j = xs                    # (B,2) (B,2) (n,)
+                R = jnp.maximum(
+                    R, jnp.where(g_j, q_j[..., None], -jnp.inf))
+                acc = acc + wm_j[..., None] * jnp.maximum(G, R)
+                return (R, acc), None
+
+            init = (jnp.full((B, 2, n), -jnp.inf),
+                    jnp.zeros((B, 2, n), p_T.dtype))
+            (_, accT), _ = jax.lax.scan(
+                step, init, (lead(q), lead(wm), jgt), unroll=4)
+            tog = pre + own + (accT - G * wpre) + suf_lin
+            return stat, tog
+
+        # "last" objective: max over members doesn't decompose into
+        # prefix/suffix sums — walk the queue with per-row running maxima
+        # (row s = toggle at s, row n = incumbent), O(B n) carry
+        pad = jnp.zeros((B, 2, 1), p_T.dtype)
+        delta_r = jnp.concatenate([delta, pad], 2)
+        q_self_r = jnp.concatenate([q_self, pad - jnp.inf], 2)
+
+        def step(carry, xs):
+            run_max, acc = carry                # (B, 2, n+1) each
+            j, q_j, c_j, m_j = xs
+            jeq = j == rows                     # (n+1,), broadcasts
+            jge = j >= rows
+            q_col = jnp.where(jge & ~jeq, q_j[..., None] - delta_r,
+                              jnp.where(jeq, q_self_r, q_j[..., None]))
+            run_max = jnp.maximum(run_max, q_col)
+            e = run_max + c_j[..., None] + jnp.where(jge, delta_r, 0.0)
+            live = m_j[..., None] != jeq
+            acc = jnp.maximum(acc, jnp.where(live, e, 0.0))
+            return (run_max, acc), None
+
+        init = (jnp.broadcast_to(free0, (B, 2, n + 1)).astype(p_T.dtype),
+                jnp.zeros((B, 2, n + 1), p_T.dtype))
+        (_, acc), _ = jax.lax.scan(
+            step, init, (jnp.arange(n), lead(q), lead(csum),
+                         lead(mask_T)), unroll=4)
+        return acc[:, :, n], acc[:, :, :n]
+
+    slots = jnp.arange(m)
+
+    def step(carry, xs):
+        free, acc = carry                   # (B, 2, n+1, m), (B, 2, n+1)
+        j, a_j, p_j, w_j, rel_j, m_j = xs   # scalar, then (B, 2) each
+        live = m_j[..., None] != (j == rows)
+        slot = jnp.argmin(free, axis=3)
+        fmin = jnp.take_along_axis(free, slot[..., None], axis=3)[..., 0]
+        e = jnp.maximum(a_j[..., None], fmin) + p_j[..., None]
+        free = jnp.where((slots == slot[..., None]) & live[..., None],
+                         e[..., None], free)
+        if oi == 2:
+            acc = jnp.maximum(acc, jnp.where(live, e, 0.0))
+        else:
+            resp = e - rel_j[..., None]
+            acc = acc + jnp.where(
+                live, w_j[..., None] * resp if oi == 0 else resp, 0.0)
+        return (free, acc), None
+
+    init = (jnp.broadcast_to(busy_T[:, :, None, :], (B, 2, n + 1, m)),
+            jnp.zeros((B, 2, n + 1), p_T.dtype))
+    (_, acc), _ = jax.lax.scan(
+        step, init, (jnp.arange(n), lead(arr_T), lead(p_T), lead(w_T),
+                     lead(rel_T), lead(mask_T)))
+    return acc[:, :, n], acc[:, :, :n]
+
+
+def _device_round(assign, dev_end, dev_resp, dev_wresp, oi: int):
+    """Incumbent + toggled stats of the private device tier, O(B n):
+    per-job contributions are constants, so sum objectives are one ± of a
+    precomputed constant and "last" needs only the masked top-2."""
+    member = assign == 2
+    if oi == 2:
+        iota = jnp.arange(assign.shape[1])
+        ends = jnp.where(member, dev_end, -jnp.inf)
+        amax = jnp.argmax(ends, axis=1)
+        max1 = jnp.take_along_axis(ends, amax[:, None], axis=1)[:, 0]
+        is_max = iota == amax[:, None]
+        max2 = jnp.max(jnp.where(is_max, -jnp.inf, ends), axis=1,
+                       initial=-jnp.inf)
+        stat = jnp.maximum(max1, 0.0)
+        tog = jnp.where(
+            member,
+            jnp.maximum(jnp.where(is_max, max2[:, None], max1[:, None]),
+                        0.0),
+            jnp.maximum(stat[:, None], dev_end))
+        return stat, tog
+    con = dev_wresp if oi == 0 else dev_resp
+    stat = jnp.sum(jnp.where(member, con, 0.0), axis=1)
+    return stat, stat[:, None] + jnp.where(member, -con, con)
+
+
+def _round_batched(assign, valid, tc, dev, oi: int):
+    """One delta-evaluated neighbourhood round for the whole batch.
+
+    Returns ((B,) incumbent objectives, (B, n, 3) candidate values):
+    entry (b, k, m) is the exact objective of instance b with job k moved
+    to machine m, assembled from the two affected tiers' toggled stats
+    and the incumbent's third-tier stat. No-op moves and phantom
+    (padding) jobs score +inf. tc holds the stacked (B, 2, n) per-tier
+    queue-order constants; dev the device-tier constants."""
+    B, n = assign.shape
+    mask_T = jnp.take_along_axis(
+        jnp.stack([assign == 0, assign == 1], axis=1), tc["order"], axis=2)
+    stat_T, tog_pos = _tier_rounds(mask_T, tc["arr"], tc["p"], tc["w"],
+                                   tc["rel"], tc["busy"], oi)
+    tog_T = jnp.take_along_axis(tog_pos, tc["pos"], axis=2)  # pos -> job
+    stat_d, tog_d = _device_round(assign, dev["end"], dev["resp"],
+                                  dev["wresp"], oi)
+    stats = jnp.concatenate([stat_T, stat_d[:, None]], 1)    # (B, 3)
+    tog = jnp.concatenate([tog_T, tog_d[:, None, :]], 1)     # (B, 3, n)
+    if oi == 2:
+        total = jnp.max(stats, axis=1)
+        src_t = jnp.take_along_axis(tog, assign[:, None, :],
+                                    axis=1)[:, 0, :]
+        third = jnp.clip(
+            3 - assign[:, :, None] - jnp.arange(3)[None, None, :], 0, 2)
+        stats_third = jnp.take_along_axis(
+            stats, third.reshape(B, -1), axis=1).reshape(B, n, 3)
+        vals = jnp.maximum(jnp.maximum(src_t[:, :, None],
+                                       tog.transpose(0, 2, 1)),
+                           stats_third)
+    else:
+        total = stats[:, 0] + stats[:, 1] + stats[:, 2]
+        d = tog - stats[:, :, None]             # per-tier toggle deltas
+        src_d = jnp.take_along_axis(d, assign[:, None, :], axis=1)[:, 0, :]
+        vals = total[:, None, None] + src_d[:, :, None] + \
+            d.transpose(0, 2, 1)
+    vals = jnp.where(jnp.arange(3)[None, None, :] == assign[:, :, None],
+                     jnp.inf, vals)
+    vals = jnp.where(valid[:, :, None], vals, jnp.inf)
+    return total, vals
+
+
+def _greedy_assign_batched(rel, w, proc, trans, valid, busy_c, busy_e):
+    """Vectorised `scheduler.greedy_schedule` for the whole batch: jobs in
+    (release, -weight, index) order, each to the machine minimising its
+    completion time given the free slots so far, ties to the lower tier
+    (device < edge < cloud) — the same rule, same tie-breaks. One lax.scan
+    over job ranks runs every instance in lockstep; phantom jobs are
+    skipped and stay pinned to the (zero-cost) device tier."""
+    B, n = rel.shape
+    order = jax.vmap(lambda r, ww: jnp.lexsort((-ww, r)))(rel, w)
+    binds = jnp.arange(B)
+
+    m_mm = max(busy_c.shape[1], busy_e.shape[1])
+    free_T0 = jnp.stack([                            # (B, 2, m), +inf pads
+        jnp.pad(busy_c, ((0, 0), (0, m_mm - busy_c.shape[1])),
+                constant_values=jnp.inf),
+        jnp.pad(busy_e, ((0, 0), (0, m_mm - busy_e.shape[1])),
+                constant_values=jnp.inf)], axis=1)
+    slots = jnp.arange(m_mm)
+
+    def step(carry, j):
+        free_T, assign = carry                       # (B, 2, m), (B, n)
+        k = order[:, j]                              # (B,) this rank's job
+        v = valid[binds, k]
+        r = rel[binds, k]
+        arr_T = r[:, None] + trans[binds, k, :2]     # (B, 2)
+        slot = jnp.argmin(free_T, axis=2)            # earliest-free machine
+        fmin = jnp.take_along_axis(free_T, slot[..., None], axis=2)[..., 0]
+        end_T = jnp.maximum(arr_T, fmin) + proc[binds, k, :2]
+        end_dev = r + trans[binds, k, 2] + proc[binds, k, 2]
+        # argmin over [device, edge, cloud] keeps the first (lowest) tier
+        # on ties, exactly like greedy_schedule's (ED, ES, CC) probe order
+        pick = jnp.argmin(
+            jnp.stack([end_dev, end_T[:, 1], end_T[:, 0]], 1), axis=1)
+        tier = jnp.asarray([2, 1, 0], jnp.int32)[pick]
+        assign = assign.at[binds, k].set(
+            jnp.where(v, tier, assign[binds, k]))
+        claim = (v[:, None] & (tier[:, None] == jnp.arange(2)))[..., None] \
+            & (slots == slot[..., None])
+        free_T = jnp.where(claim, end_T[..., None], free_T)
+        return (free_T, assign), None
+
+    init = (free_T0, jnp.full((B, n), 2, jnp.int32))
+    (_, assign), _ = jax.lax.scan(step, init, jnp.arange(n))
+    return assign
+
+
+@functools.partial(jax.jit, static_argnames=("objective", "greedy_init"))
+def _tabu_run_batched(assign0, rel, w, proc, trans, valid, max_rounds,
+                      busy_c, busy_e, objective: str,
+                      greedy_init: bool = False):
+    """Steepest descent over the n x 3 single-move neighbourhood for B
+    instances at once, entirely on-device: one batched delta-evaluated
+    round per while_loop iteration, accept each instance's best strictly
+    improving move (plus a second, exactly-composing move on the other
+    shared tier when one improves), per-instance convergence flags (a
+    ward at a 1-move local optimum idles while stragglers keep
+    searching). The incumbent objective is re-derived from fresh per-tier
+    passes every round — no accumulator drift by construction. Machine
+    counts are carried by the busy vector shapes (phantom machines =
+    +inf), so changing fleet sizes does not retrace beyond the new
+    shapes."""
+    oi = _OBJ_IDX[objective]
+    B, n = assign0.shape
+    if greedy_init:
+        assign0 = _greedy_assign_batched(rel, w, proc, trans, valid,
+                                         busy_c, busy_e)
+    m_mm = max(busy_c.shape[1], busy_e.shape[1])
+    busy_T = jnp.stack([
+        jnp.pad(busy_c, ((0, 0), (0, m_mm - busy_c.shape[1])),
+                constant_values=jnp.inf),
+        jnp.pad(busy_e, ((0, 0), (0, m_mm - busy_e.shape[1])),
+                constant_values=jnp.inf)], axis=1)           # (B, 2, m)
+    parts = []
+    for m in (0, 1):
+        arr = rel + trans[:, :, m]
+        order = jax.vmap(lambda r, a: jnp.lexsort((r, a)))(rel, arr)
+        pos = jax.vmap(jnp.argsort)(order)      # job id -> queue position
+
+        def gat(x, o=order):
+            return jnp.take_along_axis(x, o, axis=1)
+
+        parts.append({"order": order, "pos": pos, "arr": gat(arr),
+                      "p": gat(proc[:, :, m]), "w": gat(w),
+                      "rel": gat(rel)})
+    tc = {key: jnp.stack([parts[0][key], parts[1][key]], axis=1)
+          for key in parts[0]}                  # each (B, 2, n)
+    tc["busy"] = busy_T
+    dev_end = rel + trans[:, :, 2] + proc[:, :, 2]
+    dev = {"end": dev_end, "resp": dev_end - rel,
+           "wresp": w * (dev_end - rel)}
+
+    def round_all(assign):
+        return _round_batched(assign, valid, tc, dev, oi)
+
+    binds = jnp.arange(B)
 
     def cond(state):
-        _, _, rnd, improved = state
-        return improved & (rnd < max_rounds)
+        _, _, rnd, active = state
+        return jnp.any(active) & (rnd < max_rounds)
 
     def body(state):
-        assign, best_v, rnd, _ = state
-        cand = jnp.tile(assign[None], (N_MACHINES * n, 1))
-        cand = cand.at[jnp.arange(N_MACHINES * n), job_idx].set(mach)
-        vals = jax.vmap(value)(cand)
-        vals = jnp.where(mach == assign[job_idx], jnp.inf, vals)
-        i = jnp.argmin(vals)
-        improved = vals[i] < best_v
-        return (jnp.where(improved, cand[i], assign),
-                jnp.where(improved, vals[i], best_v),
-                rnd + 1, improved)
+        assign, _, rnd, active = state
+        total, vals = round_all(assign)
+        flat = vals.reshape(B, -1)              # candidate (k, m) = k*3 + m
+        i1 = jnp.argmin(flat, axis=1)
+        v1 = jnp.take_along_axis(flat, i1[:, None], axis=1)[:, 0]
+        k1 = i1 // N_MACHINES
+        m1 = (i1 % N_MACHINES).astype(assign.dtype)
+        improved = active & (v1 < total)
+        src1 = assign[binds, k1]
+        new_assign = assign.at[binds, k1].set(
+            jnp.where(improved, m1, src1))
+        # the carried value is the FRESH per-tier evaluation of the
+        # incumbent whenever a ward converges (its last round rejects
+        # every move, so `total` is its final assignment's exact score);
+        # only a max_rounds cap can surface a delta-assembled value
+        value = jnp.where(improved, v1, total)
+        if oi != 2:
+            # paired acceptance: a second strictly-improving move whose
+            # shared-tier footprint is disjoint from the first composes
+            # EXACTLY for sum objectives — cloud/edge queues are disjoint
+            # and the private device tier is additive per job — so its
+            # standalone delta still holds after the first move commits
+            sh0 = (src1 == 0) | (m1 == 0)
+            sh1 = (src1 == 1) | (m1 == 1)
+            other = jnp.where(sh0, 1, 0).astype(assign.dtype)
+            pairable = improved & ~(sh0 & sh1)
+            ok_src = (assign == other[:, None]) | (assign == 2)
+            mr = jnp.arange(N_MACHINES)[None, None, :]
+            ok_dst = (mr == other[:, None, None]) | (mr == 2)
+            elig = (ok_src[:, :, None] & ok_dst &
+                    (jnp.arange(n)[None, :, None] != k1[:, None, None]))
+            flat2 = jnp.where(elig.reshape(B, -1), flat, jnp.inf)
+            i2 = jnp.argmin(flat2, axis=1)
+            v2 = jnp.take_along_axis(flat2, i2[:, None], axis=1)[:, 0]
+            k2 = i2 // N_MACHINES
+            m2 = (i2 % N_MACHINES).astype(assign.dtype)
+            accept2 = pairable & (v2 < total)
+            new_assign = new_assign.at[binds, k2].set(
+                jnp.where(accept2, m2, new_assign[binds, k2]))
+            value = jnp.where(accept2, value + (v2 - total), value)
+        return new_assign, value, rnd + 1, improved
 
-    state = (assign0, value(assign0), jnp.int32(0), jnp.bool_(True))
-    assign, best_v, rounds, _ = jax.lax.while_loop(cond, body, state)
-    return assign, best_v, rounds
+    state = (assign0, jnp.full((B,), jnp.inf), jnp.int32(0),
+             jnp.ones((B,), bool))
+    assign, totals, rounds, _ = jax.lax.while_loop(cond, body, state)
+    # max_rounds == 0 (greedy probe): the loop never evaluated anything
+    totals = jax.lax.cond(rounds == 0,
+                          lambda args: round_all(args[0])[0],
+                          lambda args: args[1], (assign, totals))
+    return assign, totals, rounds
+
+
+def _per_instance_mpt(machines_per_tier, B: int):
+    """-> B (cloud, edge) machine-count pairs from one pair or a per-ward
+    sequence."""
+    if machines_per_tier is None:
+        return [(1, 1)] * B
+    seq = list(machines_per_tier)
+    if len(seq) == 2 and all(isinstance(x, (int, np.integer)) for x in seq):
+        return [(int(seq[0]), int(seq[1]))] * B
+    if len(seq) != B:
+        raise ValueError(f"machines_per_tier lists {len(seq)} fleets "
+                         f"for {B} instances")
+    return [(int(c), int(e)) for c, e in seq]
+
+
+def tabu_search_batched(batch_jobs: Sequence[Sequence[JobSpec]],
+                        initial: Sequence[Sequence[int]] | None = None,
+                        *, max_rounds: int | None = None,
+                        objective: str = "weighted",
+                        machines_per_tier=(1, 1),
+                        busy_until=None):
+    """Plan B independent ward instances in ONE jitted device call.
+
+    batch_jobs: B job lists; sizes may differ — instances are padded to
+    the largest with phantom jobs (p = 0, w = 0, masked transparent:
+    arr = −inf in every shared queue) that contribute exactly 0 to every
+    objective and whose moves score +inf. machines_per_tier: one
+    (cloud, edge) pair for the whole fleet or a per-ward sequence; mixed
+    fleets are padded to the per-tier maximum with phantom machines whose
+    initial busy time is +inf, so FIFO dispatch never selects them.
+    busy_until: optional per-ward (cloud_times, edge_times) pairs.
+
+    Returns (objectives (B,) float ndarray, [per-ward (n_i,) int arrays]).
+    Termination is per-instance: a ward that reaches a 1-move local
+    optimum goes inactive while stragglers keep searching; the device call
+    returns when every ward has converged (or after max_rounds moves,
+    default 50 * n_max). Each ward's trajectory is identical to a solo
+    `tabu_search_jax` run — same round code, same tie-breaks — which the
+    parity suite pins (DESIGN.md §8). Recompiles per (B, n_max, padded
+    machine counts, objective); replans reusing one shape hit the cache.
+    """
+    B = len(batch_jobs)
+    if B == 0:
+        return np.zeros((0,)), []
+    sizes = [len(jobs) for jobs in batch_jobs]
+    n_max = max(sizes)
+    mpts = _per_instance_mpt(machines_per_tier, B)
+    m_max = (max(c for c, _ in mpts), max(e for _, e in mpts))
+    if busy_until is None:
+        busy_until = [None] * B
+    if n_max == 0:
+        return np.zeros((B,)), [np.zeros((0,), np.int64) for _ in range(B)]
+
+    rel = np.zeros((B, n_max), np.float32)
+    w = np.zeros((B, n_max), np.float32)
+    proc = np.zeros((B, n_max, N_MACHINES), np.float32)
+    trans = np.zeros((B, n_max, N_MACHINES), np.float32)
+    valid = np.zeros((B, n_max), bool)
+    assign0 = np.full((B, n_max), 2, np.int32)  # phantoms pinned to device
+    busy_c = np.full((B, m_max[0]), np.inf, np.float32)
+    busy_e = np.full((B, m_max[1]), np.inf, np.float32)
+    for b, jobs in enumerate(batch_jobs):
+        nb = sizes[b]
+        bc, be = _normalize_busy(busy_until[b], mpts[b])
+        busy_c[b, :mpts[b][0]] = bc
+        busy_e[b, :mpts[b][1]] = be
+        if nb == 0:
+            continue
+        rel[b, :nb], w[b, :nb], proc[b, :nb], trans[b, :nb] = \
+            _specs_to_np(jobs)
+        valid[b, :nb] = True
+        if initial is not None:
+            assign0[b, :nb] = list(initial[b])
+    if max_rounds is None:
+        max_rounds = 50 * n_max
+    assign, totals, _ = _tabu_run_batched(
+        assign0, rel, w, proc, trans, valid, np.int32(max_rounds),
+        busy_c, busy_e, objective, greedy_init=initial is None)
+    assign = np.asarray(assign)
+    return (np.asarray(totals, np.float64),
+            [assign[b, :sizes[b]] for b in range(B)])
 
 
 def tabu_search_jax(jobs: Sequence[JobSpec],
@@ -236,43 +665,32 @@ def tabu_search_jax(jobs: Sequence[JobSpec],
     """Fully-jitted Algorithm-2 neighbourhood search. Returns
     (best objective value, best assignment as an (n,) int array).
 
-    Unlike `stochastic_search` (which syncs to NumPy every iteration),
-    the whole search — candidate generation, n x 3 neighbourhood
-    evaluation, move acceptance, termination — runs inside one jitted
-    lax.while_loop; the only transfer is the final result. Each accepted
-    move strictly improves the objective, so the search terminates at a
-    1-move local optimum of the same neighbourhood the Python tabu search
-    explores.
+    The whole search — delta-evaluated n x 3 neighbourhood rounds, move
+    acceptance, termination — runs inside one jitted lax.while_loop; the
+    only transfer is the final result. Each accepted move strictly
+    improves the objective, so the search terminates at a 1-move local
+    optimum of the same neighbourhood the Python tabu search explores.
+    This is the B = 1 case of `tabu_search_batched` (same compiled round
+    code), so solo and batched runs follow identical trajectories.
 
     busy_until: optional (cloud_times, edge_times) initial machine free
     times — online replans pass the committed fleet state here, so the
     searched objective is the commit objective (DESIGN.md §7). Traced, so
     successive replans hit the same compiled search."""
-    n = len(jobs)
-    rel, w, proc, trans = specs_to_arrays(jobs)
-    busy = _normalize_busy(busy_until, machines_per_tier)
-    if initial is None:
-        from repro.core import scheduler                   # no import cycle:
-        from repro.core.simulator import MACHINES          # scheduler lazy-
-        initial = [MACHINES.index(t)                       # loads this module
-                   for t in scheduler.greedy_schedule(
-                       jobs,
-                       machines_per_tier={CC: machines_per_tier[0],
-                                          ES: machines_per_tier[1]},
-                       busy_until={CC: np.asarray(busy[0]),
-                                   ES: np.asarray(busy[1])})]
-    assign0 = jnp.asarray(initial, jnp.int32)
-    if max_rounds is None:
-        max_rounds = 50 * n
-    assign, best_v, _ = _tabu_run(assign0, rel, w, proc, trans,
-                                  jnp.int32(max_rounds), busy, objective,
-                                  machines_per_tier)
-    return float(best_v), np.asarray(assign)
+    vals, assigns = tabu_search_batched(
+        [jobs], None if initial is None else [list(initial)],
+        max_rounds=max_rounds, objective=objective,
+        machines_per_tier=(int(machines_per_tier[0]),
+                           int(machines_per_tier[1])),
+        busy_until=None if busy_until is None else [busy_until])
+    return float(vals[0]), assigns[0]
 
 
 def stochastic_search(jobs: Sequence[JobSpec], key,
                       initial: np.ndarray, *, iters: int = 200,
-                      pop: int = 256, objective: str = "weighted"):
+                      pop: int = 256, objective: str = "weighted",
+                      machines_per_tier: Tuple[int, int] = (1, 1),
+                      busy_until=None):
     """Random-restart 1-move local search, evaluated in vmapped batches.
 
     Each iteration proposes `pop` single-job reassignments of the incumbent
@@ -280,11 +698,18 @@ def stochastic_search(jobs: Sequence[JobSpec], key,
     the same neighbourhood Algorithm 2 explores, but evaluates the whole
     neighbourhood batch in one device call. Kept as the host-synced
     baseline for `tabu_search_jax` (see benchmarks/scheduler_scale.py).
+
+    machines_per_tier / busy_until describe the fleet the schedule runs on
+    (DESIGN.md §7) and are threaded into every candidate evaluation — the
+    searched objective is the deployed fleet's objective, not the
+    (1, 1)-idle default's.
     """
     n = len(jobs)
     rel, w, proc, trans = specs_to_arrays(jobs)
     incumbent = jnp.asarray(initial, jnp.int32)
-    best = evaluate_assignments(incumbent[None], rel, w, proc, trans)
+    best = evaluate_assignments(incumbent[None], rel, w, proc, trans,
+                                machines_per_tier=machines_per_tier,
+                                busy_until=busy_until)
     best_v = float(best[objective][0])
 
     for _ in range(iters):
@@ -293,7 +718,9 @@ def stochastic_search(jobs: Sequence[JobSpec], key,
         machines = jax.random.randint(k2, (pop,), 0, N_MACHINES)
         cand = jnp.tile(incumbent[None], (pop, 1))
         cand = cand.at[jnp.arange(pop), jobs_i].set(machines)
-        m = evaluate_assignments(cand, rel, w, proc, trans)
+        m = evaluate_assignments(cand, rel, w, proc, trans,
+                                 machines_per_tier=machines_per_tier,
+                                 busy_until=busy_until)
         vals = np.asarray(m[objective])
         i = int(np.argmin(vals))
         if vals[i] < best_v:

@@ -74,12 +74,15 @@ def machine_free_times(busy_until: Mapping[str, Sequence[float]] | None,
 
     ``busy_until[tier]`` may list fewer entries than there are machines —
     the rest start idle (free at t=0). More entries than machines is a
-    caller bug (a tier cannot be running more jobs than it has servers).
+    caller bug (a tier cannot be running more jobs than it has servers) —
+    reported as ValueError, not assert, so the guard survives
+    ``python -O``.
     """
     vals = sorted(float(v) for v in (busy_until or {}).get(tier, ()))
-    assert len(vals) <= machines, \
-        f"busy_until[{tier!r}] lists {len(vals)} occupied machines " \
-        f"but the tier has only {machines}"
+    if len(vals) > machines:
+        raise ValueError(
+            f"busy_until[{tier!r}] lists {len(vals)} occupied machines "
+            f"but the tier has only {machines}")
     return [0.0] * (machines - len(vals)) + vals
 
 

@@ -11,6 +11,9 @@ four baseline strategies.
 
   python -m repro.launch.serve --patients 10 --horizon 30 --seed 0
   python -m repro.launch.serve --tiers tpu          # TPU-fleet tier specs
+  python -m repro.launch.serve --wards 16           # multi-hospital fleet:
+                                                    # one batched device call
+                                                    # plans every ward
 """
 from __future__ import annotations
 
@@ -67,6 +70,26 @@ def make_jobs(rng, patients: int, horizon: float):
     return jobs
 
 
+def _setup_fleet(tiers_kind, cloud_machines, edge_machines):
+    """Shared single-ward / --wards setup: tier specs (with machine-count
+    overrides), real models + engines (the compute that actually runs;
+    keys are stable across processes — crc32, not PYTHONHASHSEED-salted
+    hash() — so --seed really reproduces a run), and the calibrated cost
+    model. -> (tiers, machines_per_tier, engines, cost_model)."""
+    tiers = paper_tiers() if tiers_kind == "paper" else tpu_tiers()
+    for tid, count in ((CC, cloud_machines), (ES, edge_machines)):
+        if count is not None:
+            tiers[tid] = dataclasses.replace(tiers[tid], machines=count)
+    machines_per_tier = {tid: t.machines for tid, t in tiers.items()
+                         if not t.private}
+    engines = {}
+    for wl_cfg in ICU_WORKLOADS:
+        model = ICULSTM(wl_cfg)
+        key = jax.random.PRNGKey(zlib.crc32(wl_cfg.name.encode()))
+        engines[wl_cfg] = ClassifierEngine(model, model.init(key))
+    return tiers, machines_per_tier, engines, calibrate(tiers, engines)
+
+
 def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
         execute=True, quantum=None, verbose=True, jax_threshold=None,
         cloud_machines=None, edge_machines=None):
@@ -75,24 +98,8 @@ def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
     cloud_machines / edge_machines: override the shared-server count of a
     tier (TierSpec.machines is honored by every strategy)."""
     rng = np.random.default_rng(seed)
-    tiers = paper_tiers() if tiers_kind == "paper" else tpu_tiers()
-    for tid, count in ((CC, cloud_machines), (ES, edge_machines)):
-        if count is not None:
-            tiers[tid] = dataclasses.replace(tiers[tid], machines=count)
-    machines_per_tier = {tid: t.machines for tid, t in tiers.items()
-                         if not t.private}
-
-    # real models + engines (the compute that actually runs); keys are
-    # stable across processes (crc32, not PYTHONHASHSEED-salted hash()),
-    # so --seed really reproduces a run
-    engines = {}
-    for wl_cfg in ICU_WORKLOADS:
-        model = ICULSTM(wl_cfg)
-        key = jax.random.PRNGKey(zlib.crc32(wl_cfg.name.encode()))
-        params = model.init(key)
-        engines[wl_cfg] = ClassifierEngine(model, params)
-
-    cost_model = calibrate(tiers, engines)
+    tiers, machines_per_tier, engines, cost_model = _setup_fleet(
+        tiers_kind, cloud_machines, edge_machines)
     jobs = make_jobs(rng, patients, horizon)
     quantum = quantum or min(
         min(cost_model.times(j)[t][1] for t in tiers) for j in jobs)
@@ -130,6 +137,61 @@ def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
     return results, lb
 
 
+def run_wards(wards=4, patients=10, horizon=30.0, seed=0,
+              tiers_kind="paper", quantum=None, verbose=True,
+              cloud_machines=None, edge_machines=None, min_batch=None):
+    """Multi-hospital fleet mode: plan `wards` independent ward instances
+    in ONE batched device call (scheduler.search_batched, DESIGN.md §8).
+
+    The metropolitan cloud spec is shared — every ward sees the same
+    cloud machine count — while each ward owns its edge servers and its
+    patients' end devices. Planning is per-ward independent: a ward
+    optimises against the full cloud fleet, so cross-ward cloud
+    contention is not yet modelled (ROADMAP open item). Calibration runs
+    once (the cost model describes the shared hardware), and one quantum
+    (the fleet-wide minimum) keeps every ward's time unit comparable.
+
+    Returns (list of per-ward Schedules, wall seconds of the batched
+    planning call)."""
+    rng = np.random.default_rng(seed)
+    tiers, machines_per_tier, _, cost_model = _setup_fleet(
+        tiers_kind, cloud_machines, edge_machines)
+
+    ward_jobs = [make_jobs(rng, patients, horizon) for _ in range(wards)]
+    quantum = quantum or min(
+        min(cost_model.times(j)[t][1] for t in tiers)
+        for jobs in ward_jobs for j in jobs)
+    ward_specs = [jobs_to_specs(cost_model, jobs, normalize=quantum)
+                  for jobs in ward_jobs]
+
+    import time
+    # compile once at the real (B, n_max, fleet) shape so the reported
+    # rate is the steady-state replanning throughput, not XLA tracing;
+    # the sequential fallback path compiles nothing, so skip the warm-up
+    threshold = (scheduler.BATCHED_SEARCH_MIN_WARDS if min_batch is None
+                 else min_batch)
+    if wards >= threshold:
+        scheduler.search_batched(ward_specs, max_count=1,
+                                 machines_per_tier=machines_per_tier,
+                                 min_batch=min_batch)
+    t0 = time.perf_counter()
+    schedules = scheduler.search_batched(
+        ward_specs, machines_per_tier=machines_per_tier,
+        min_batch=min_batch)
+    seconds = time.perf_counter() - t0
+    if verbose:
+        print(f"{'ward':>4s} {'jobs':>5s} {'weighted':>9s} "
+              f"{'unweighted':>10s} {'last':>6s}  "
+              f"(time unit = {quantum*1e3:.3f} ms)")
+        for i, s in enumerate(schedules):
+            print(f"{i:4d} {len(s.entries):5d} {s.weighted_sum:9.0f} "
+                  f"{s.unweighted_sum:10.0f} {s.last_end:6.0f}")
+        total = sum(s.weighted_sum for s in schedules)
+        print(f"fleet total weighted {total:.0f}; planned {wards} wards "
+              f"in {seconds*1e3:.1f} ms ({wards/seconds:.1f} wards/s)")
+    return schedules, seconds
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--patients", type=int, default=10)
@@ -144,12 +206,23 @@ def main():
                     help="shared cloud servers (default: TierSpec.machines)")
     ap.add_argument("--edge-machines", type=int, default=None,
                     help="shared edge servers (default: TierSpec.machines)")
+    ap.add_argument("--wards", type=int, default=0,
+                    help="multi-hospital mode: plan this many wards in one "
+                         "batched device call (shared cloud, per-ward "
+                         "edge/device fleets); 0 = single-ward mode")
     args = ap.parse_args()
-    run(patients=args.patients, horizon=args.horizon, seed=args.seed,
-        tiers_kind=args.tiers, execute=not args.no_execute,
-        jax_threshold=args.jax_threshold,
-        cloud_machines=args.cloud_machines,
-        edge_machines=args.edge_machines)
+    if args.wards > 0:
+        run_wards(wards=args.wards, patients=args.patients,
+                  horizon=args.horizon, seed=args.seed,
+                  tiers_kind=args.tiers,
+                  cloud_machines=args.cloud_machines,
+                  edge_machines=args.edge_machines)
+    else:
+        run(patients=args.patients, horizon=args.horizon, seed=args.seed,
+            tiers_kind=args.tiers, execute=not args.no_execute,
+            jax_threshold=args.jax_threshold,
+            cloud_machines=args.cloud_machines,
+            edge_machines=args.edge_machines)
 
 
 if __name__ == "__main__":

@@ -131,7 +131,8 @@ class TestBusyUntilSemantics:
     def test_machine_free_times_validates(self):
         assert machine_free_times(None, CC, 2) == [0.0, 0.0]
         assert machine_free_times({CC: [7.0]}, CC, 2) == [0.0, 7.0]
-        with pytest.raises(AssertionError):
+        # ValueError (not assert) so the guard survives python -O
+        with pytest.raises(ValueError):
             machine_free_times({CC: [1.0, 2.0, 3.0]}, CC, 2)
 
     def test_greedy_respects_busy_and_fleet(self):

@@ -1,0 +1,315 @@
+"""Batched fleet-scale scheduling (DESIGN.md §8): padding/masking
+semantics, batched-vs-per-instance parity, the search_batched dispatch,
+the fleet-aware stochastic search, and the ValueError busy guards.
+
+Instances are integer-valued (float32-exact), so "identical trajectories"
+is testable as bit-identical objectives after exact re-simulation."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from prop import sweep
+from repro.core import online, scheduler, scheduler_jax
+from repro.core.problems import ward_batch
+from repro.core.simulator import MACHINES, JobSpec, simulate
+from repro.core.tiers import CC, ED, ES
+
+
+def _random_jobs(rng, n):
+    return [JobSpec(name=f"J{i}", release=float(rng.integers(0, 30)),
+                    weight=float(rng.integers(1, 4)),
+                    proc={t: float(rng.integers(1, 30)) for t in MACHINES},
+                    trans={CC: float(rng.integers(0, 60)),
+                           ES: float(rng.integers(0, 15)), ED: 0.0})
+            for i in range(n)]
+
+
+def _random_fleet(rng):
+    """(machines_per_tier pair, busy_until pair) with some machines deep
+    busy and some idle."""
+    mpt = (int(rng.integers(1, 4)), int(rng.integers(1, 4)))
+    busy = tuple(
+        [float(rng.choice([0.0, float(rng.integers(1, 40))]))
+         for _ in range(int(rng.integers(0, m + 1)))]
+        for m in mpt)
+    return mpt, busy
+
+
+def _exact(jobs, assign, mpt=(1, 1), busy=None, objective="weighted"):
+    s = simulate(jobs, [MACHINES[int(i)] for i in assign],
+                 machines_per_tier={CC: mpt[0], ES: mpt[1]},
+                 busy_until=None if busy is None
+                 else {CC: busy[0], ES: busy[1]})
+    return {"weighted": s.weighted_sum, "unweighted": s.unweighted_sum,
+            "last": s.last_end}[objective]
+
+
+def _assert_batch_parity(batch, mpts, busys, objective="weighted"):
+    """Batched search == per-instance tabu_search_jax, bit-identical after
+    exact re-simulation, and reported values match the simulator."""
+    vals, assigns = scheduler_jax.tabu_search_batched(
+        batch, objective=objective, machines_per_tier=mpts,
+        busy_until=busys)
+    for jobs, mpt, busy, vb, ab in zip(batch, mpts, busys, vals, assigns):
+        assert len(ab) == len(jobs)
+        v1, a1 = scheduler_jax.tabu_search_jax(
+            jobs, objective=objective, machines_per_tier=mpt,
+            busy_until=busy)
+        got = _exact(jobs, ab, mpt, busy, objective)
+        solo = _exact(jobs, a1, mpt, busy, objective)
+        assert got == solo, (got, solo)
+        assert abs(vb - got) < 1e-3, (vb, got)
+
+
+class TestBatchedParity:
+    def test_mixed_sizes_fast(self):
+        """Small fast-tier case: mixed ward sizes force phantom padding."""
+        batch = [_random_jobs(np.random.default_rng(50 + i), n)
+                 for i, n in enumerate((4, 11, 7))]
+        B = len(batch)
+        _assert_batch_parity(batch, [(1, 1)] * B, [None] * B)
+
+    def test_fleet_and_busy_fast(self):
+        """(2,3) fleet with occupied machines, single fast case."""
+        batch = [_random_jobs(np.random.default_rng(60 + i), n)
+                 for i, n in enumerate((6, 9))]
+        mpts = [(2, 3), (1, 2)]
+        busys = [([5.0, 17.0], [0.0, 3.0, 21.0]), (None)]
+        _assert_batch_parity(batch, mpts, busys)
+
+    # job counts drawn from a fixed grid so jit caches stay warm across
+    # sweep cases (DESIGN.md §6)
+    N_GRID = (4, 9, 14)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("objective", ["weighted", "unweighted",
+                                           "last"])
+    def test_parity_sweep(self, objective):
+        """Mixed-size batches, mixed fleets incl (2,3), nonzero
+        busy_until — batched trajectories identical to solo runs."""
+        def check(rng):
+            B = int(rng.integers(2, 5))
+            batch = [_random_jobs(rng, int(rng.choice(self.N_GRID)))
+                     for _ in range(B)]
+            fleets = [_random_fleet(rng) for _ in range(B)]
+            if rng.integers(2):          # half the cases: uniform fleet
+                fleets = [fleets[0]] * B
+            _assert_batch_parity(batch, [f[0] for f in fleets],
+                                 [f[1] for f in fleets], objective)
+        sweep(check, n_cases=6, seed={"weighted": 0, "unweighted": 100,
+                                      "last": 200}[objective])
+
+    @pytest.mark.slow
+    def test_parity_explicit_23_fleet_sweep(self):
+        """The acceptance fleet: every ward on (2, 3) with busy machines."""
+        def check(rng):
+            B = int(rng.integers(2, 5))
+            batch = [_random_jobs(rng, int(rng.choice(self.N_GRID)))
+                     for _ in range(B)]
+            busys = [([float(rng.integers(0, 25))],
+                      [float(rng.integers(0, 25)),
+                       float(rng.integers(0, 25))]) for _ in range(B)]
+            _assert_batch_parity(batch, [(2, 3)] * B, busys)
+        sweep(check, n_cases=5, seed=300)
+
+    @pytest.mark.slow
+    def test_ward_batch_generator_plans(self):
+        """problems.ward_batch feeds search_batched end-to-end: every
+        scenario yields valid exact schedules for mixed-size wards."""
+        rng = np.random.default_rng(7)
+        for scenario in ("poisson", "surge", "quiet"):
+            batch = ward_batch(rng, 4, n_lo=4, n_hi=10, scenario=scenario)
+            scheds = scheduler.search_batched(batch, max_count=5,
+                                              min_batch=1)
+            for jobs, s in zip(batch, scheds):
+                assert len(s.entries) == len(jobs)
+                ref = simulate(jobs, s.assignment())
+                assert s.weighted_sum == ref.weighted_sum
+
+
+class TestPhantomPadding:
+    def test_phantoms_contribute_zero(self):
+        """A ward padded next to a larger one returns exactly its solo
+        objective — phantom jobs add 0 to every objective."""
+        small = _random_jobs(np.random.default_rng(1), 4)
+        big = _random_jobs(np.random.default_rng(2), 15)
+        for objective in ("weighted", "unweighted", "last"):
+            vals, assigns = scheduler_jax.tabu_search_batched(
+                [small, big], objective=objective)
+            v_solo, _ = scheduler_jax.tabu_search_jax(
+                small, objective=objective)
+            assert vals[0] == v_solo
+            assert len(assigns[0]) == 4
+
+    def test_greedy_probe_matches_python_greedy(self):
+        """max_rounds=0 returns the greedy initial — and the in-graph
+        batched greedy is the same schedule as greedy_schedule."""
+        def check(rng):
+            jobs = _random_jobs(rng, int(rng.integers(2, 15)))
+            mpt, busy = _random_fleet(rng)
+            py = scheduler.greedy_schedule(
+                jobs, machines_per_tier={CC: mpt[0], ES: mpt[1]},
+                busy_until={CC: busy[0], ES: busy[1]})
+            _, assigns = scheduler_jax.tabu_search_batched(
+                [jobs], max_rounds=0, machines_per_tier=[mpt],
+                busy_until=[busy])
+            assert [MACHINES[int(i)] for i in assigns[0]] == py
+        sweep(check, n_cases=10, seed=400)
+
+    def test_empty_batch_and_empty_ward(self):
+        vals, assigns = scheduler_jax.tabu_search_batched([])
+        assert len(vals) == 0 and assigns == []
+        vals, assigns = scheduler_jax.tabu_search_batched(
+            [[], _random_jobs(np.random.default_rng(0), 5)])
+        assert vals[0] == 0.0 and len(assigns[0]) == 0
+        assert len(assigns[1]) == 5
+
+
+class TestSearchBatchedDispatch:
+    def test_batched_path_returns_exact_schedules(self):
+        problems = [_random_jobs(np.random.default_rng(10 + i), n)
+                    for i, n in enumerate((8, 13, 5, 10))]
+        mpt = {CC: 2, ES: 1}
+        scheds = scheduler.search_batched(problems, max_count=5,
+                                          machines_per_tier=mpt,
+                                          min_batch=1)
+        for jobs, s in zip(problems, scheds):
+            ref = simulate(jobs, s.assignment(), machines_per_tier=mpt)
+            assert s.weighted_sum == ref.weighted_sum
+            for t in MACHINES:
+                assert s.weighted_sum <= scheduler.all_on_tier(
+                    jobs, t, machines_per_tier=mpt).weighted_sum + 1e-6
+
+    def test_sequential_fallback_below_min_batch(self):
+        problems = [_random_jobs(np.random.default_rng(20 + i), 7)
+                    for i in range(2)]
+        a = scheduler.search_batched(problems, min_batch=10)
+        b = [scheduler.search(p) for p in problems]
+        for s1, s2 in zip(a, b):
+            assert s1.weighted_sum == s2.weighted_sum
+
+    def test_per_ward_fleets_and_busy(self):
+        problems = [_random_jobs(np.random.default_rng(30 + i), 9)
+                    for i in range(4)]
+        mpts = [{CC: 1, ES: 1}, {CC: 2, ES: 3}, {CC: 1, ES: 2},
+                {CC: 3, ES: 1}]
+        busys = [None, {CC: [4.0], ES: [2.0, 9.0]}, None, {CC: [7.0]}]
+        scheds = scheduler.search_batched(problems, max_count=5,
+                                          machines_per_tier=mpts,
+                                          busy_until=busys, min_batch=1)
+        for jobs, m, b, s in zip(problems, mpts, busys, scheds):
+            ref = simulate(jobs, s.assignment(), machines_per_tier=m,
+                           busy_until=b)
+            assert s.weighted_sum == ref.weighted_sum
+
+    def test_competitive_ratio_batch_matches_solo(self):
+        instances = [_random_jobs(np.random.default_rng(40 + i), 8)
+                     for i in range(3)]
+        ratios = online.competitive_ratio_batch(
+            instances, replans=("greedy", "tabu"), min_batch=99)
+        for replan in ("greedy", "tabu"):
+            solo = [online.competitive_ratio(jobs, replan=replan)
+                    for jobs in instances]
+            assert np.allclose(ratios[replan], solo)
+
+
+class TestStochasticFleet:
+    def test_stochastic_search_scores_the_real_fleet(self):
+        """The seed bug: candidates were scored on an idle (1,1) fleet.
+        The claimed objective must now match the exact simulator under
+        the deployed fleet and occupancy."""
+        jobs = _random_jobs(np.random.default_rng(5), 12)
+        mpt = (2, 3)
+        busy = ([6.0, 14.0], [3.0])
+        import jax
+        initial = np.asarray(
+            [MACHINES.index(t) for t in scheduler.greedy_schedule(
+                jobs, machines_per_tier={CC: mpt[0], ES: mpt[1]},
+                busy_until={CC: busy[0], ES: busy[1]})], np.int32)
+        v, a = scheduler_jax.stochastic_search(
+            jobs, jax.random.PRNGKey(0), initial, iters=30,
+            machines_per_tier=mpt, busy_until=busy)
+        exact = simulate(jobs, [MACHINES[int(i)] for i in a],
+                         machines_per_tier={CC: mpt[0], ES: mpt[1]},
+                         busy_until={CC: busy[0], ES: busy[1]})
+        assert abs(v - exact.weighted_sum) < 1e-2
+
+
+class TestBusyGuardsRaise:
+    """The overfull-busy guards are ValueError, not assert — they must
+    survive ``python -O`` (DESIGN.md §7)."""
+
+    def test_normalize_busy_overfull(self):
+        with pytest.raises(ValueError):
+            scheduler_jax._normalize_busy(([1.0, 2.0], ()), (1, 1))
+
+    def test_busy_vectors_overfull(self):
+        jobs = _random_jobs(np.random.default_rng(0), 2)
+        commits = [online._Commit(jobs[0], CC, 0.0, 0.0, 50.0),
+                   online._Commit(jobs[1], CC, 0.0, 0.0, 60.0)]
+        with pytest.raises(ValueError):
+            online._busy_vectors(commits, [], now=10.0,
+                                 machines_per_tier={CC: 1, ES: 1})
+
+    def test_mpt_length_mismatch(self):
+        batch = [_random_jobs(np.random.default_rng(0), 3)] * 3
+        with pytest.raises(ValueError):
+            scheduler_jax.tabu_search_batched(
+                batch, machines_per_tier=[(1, 1), (2, 2)])
+
+
+class TestRegressionGate:
+    """benchmarks/check_regression.py compare() logic (no bench run)."""
+
+    def _reports(self):
+        base = {
+            "head_to_head": [
+                {"n": 100, "methods": {
+                    "incremental": {"seconds": 0.01,
+                                    "speedup_vs_reference": 30.0},
+                    "jax": {"seconds": 0.005,
+                            "speedup_vs_reference": 60.0}}},
+            ],
+            "batched": {"speedup_batched_vs_sequential": 5.0,
+                        "wards_per_s_batched": 600.0,
+                        "parity_mismatches": 0},
+        }
+        import copy
+        return base, copy.deepcopy(base)
+
+    def _compare(self):
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                        os.pardir, "benchmarks"))
+        try:
+            from check_regression import compare
+        finally:
+            sys.path.pop(0)
+        return compare
+
+    def test_identical_reports_pass(self):
+        compare = self._compare()
+        committed, fresh = self._reports()
+        assert compare(committed, fresh) == []
+
+    def test_within_tolerance_passes(self):
+        compare = self._compare()
+        committed, fresh = self._reports()
+        fresh["batched"]["speedup_batched_vs_sequential"] = 4.0  # -20%
+        assert compare(committed, fresh, tolerance=0.30) == []
+
+    def test_regression_fails(self):
+        compare = self._compare()
+        committed, fresh = self._reports()
+        fresh["batched"]["wards_per_s_batched"] = 300.0          # -50%
+        fresh["head_to_head"][0]["methods"]["jax"]["seconds"] = 0.02
+        problems = compare(committed, fresh, tolerance=0.30)
+        assert any("wards_per_s" in p for p in problems)
+        assert any("jax_vs_incremental" in p for p in problems)
+
+    def test_parity_mismatch_fails(self):
+        compare = self._compare()
+        committed, fresh = self._reports()
+        fresh["batched"]["parity_mismatches"] = 2
+        assert any("parity" in p for p in compare(committed, fresh))
