@@ -18,7 +18,15 @@ hardware — regenerate the baseline when the CI host changes):
   * batched ``speedup_batched_vs_sequential`` and
     ``wards_per_s_batched`` — fleet planning throughput (DESIGN.md §8);
   * batched ``parity_mismatches`` must be exactly 0 (not a perf floor: the
-    batched search must return the per-instance search's objectives).
+    batched search must return the per-instance search's objectives);
+  * contention ``improvement_vs_naive``, ``gap_closed`` and
+    ``wards_per_s`` — the fixed-point fleet search must keep recovering
+    the shared-cloud double-booking gap at speed (DESIGN.md §9); plus two
+    hard invariants whenever a fresh contention section exists: the
+    benchmark fleet must exhibit a nonzero contention gap (> 1 — if it
+    does not, the benchmark no longer measures anything) and the fleet
+    search must strictly beat the naive plans on the fleet-true
+    objective.
 
 Invocation (documented in ROADMAP.md):
 
@@ -60,6 +68,15 @@ def _batched_metrics(report: dict) -> dict:
     return out
 
 
+def _contention_metrics(report: dict) -> dict:
+    c = report.get("contention") or {}
+    out = {}
+    for key in ("improvement_vs_naive", "gap_closed", "wards_per_s"):
+        if c.get(key):
+            out[f"contention/{key}"] = c[key]
+    return out
+
+
 def compare(committed: dict, fresh: dict, tolerance: float = 0.30
             ) -> list:
     """-> list of human-readable regression strings (empty == pass).
@@ -69,7 +86,8 @@ def compare(committed: dict, fresh: dict, tolerance: float = 0.30
     committed baseline gains sections, and never blocks on new ones).
     """
     problems = []
-    for metrics in (_head_to_head_metrics, _batched_metrics):
+    for metrics in (_head_to_head_metrics, _batched_metrics,
+                    _contention_metrics):
         com, fre = metrics(committed), metrics(fresh)
         for key, floor in com.items():
             got = fre.get(key)
@@ -82,6 +100,21 @@ def compare(committed: dict, fresh: dict, tolerance: float = 0.30
     mism = (fresh.get("batched") or {}).get("parity_mismatches")
     if mism:
         problems.append(f"batched/parity_mismatches: {mism} != 0")
+    cont = fresh.get("contention") or {}
+    if cont:
+        # hard invariants, not perf floors (DESIGN.md §9): the benchmark
+        # fleet must actually overcommit the shared cloud, and the fleet
+        # search must strictly beat the naive plans fleet-true
+        if cont.get("contention_gap", 0.0) <= 1.0:
+            problems.append(
+                f"contention/contention_gap: {cont.get('contention_gap')} "
+                f"<= 1 (benchmark fleet no longer double-books the cloud)")
+        if not cont.get("fleet_true", 0.0) < cont.get(
+                "naive_fleet_true", 0.0):
+            problems.append(
+                f"contention: fleet_true {cont.get('fleet_true')} does not "
+                f"strictly beat naive_fleet_true "
+                f"{cont.get('naive_fleet_true')}")
     return problems
 
 

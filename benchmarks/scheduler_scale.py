@@ -13,8 +13,11 @@ Head-to-head Algorithm-2 implementations (the repo's single hottest path):
 Also: JAX batched-evaluation throughput, heuristic optimality gap,
 fleet-scale batched planning throughput in wards/sec (``batched`` section:
 scheduler_jax.tabu_search_batched vs the sequential per-instance
-`scheduler.search` loop, DESIGN.md §8), and the online (non-clairvoyant)
-competitive ratio — including, behind ``--online``, per-arrival-scenario
+`scheduler.search` loop, DESIGN.md §8), cross-ward shared-cloud contention
+(``contention`` section: the double-booking gap of independent per-ward
+plans on the fleet-true evaluator and how much of it the fixed-point
+`scheduler.search_fleet` recovers, DESIGN.md §9), and the online
+(non-clairvoyant) competitive ratio — including, behind ``--online``, per-arrival-scenario
 ratios (poisson steady-state / ER-surge burst / nightly-quiet,
 core.problems.ONLINE_SCENARIOS) on single- and multi-server fleets, whose
 clairvoyant baselines are planned by one batched call per sweep. Results
@@ -182,13 +185,56 @@ def bench_batched(wards=32, n=100, max_count=5, repeats=3):
     }
 
 
+def bench_contention(wards=32, n=100, cloud_machines=4, edge_machines=2,
+                     max_count=5, max_sweeps=4):
+    """Cross-ward shared-cloud contention (DESIGN.md §9): how badly B
+    independent per-ward plans double-book the metropolitan cloud
+    (``contention_gap`` — fleet-true / claimed objective of the naive
+    plans, > 1 when overcommitted), how much of that gap the fixed-point
+    `scheduler.search_fleet` recovers (``gap_closed``), how many sweeps
+    convergence takes, and the contention-aware planning throughput in
+    wards/sec. Jobs come from `problems.metro_jobs` (the paper's Table VI
+    cost regime — cloud fast but far), the regime where every ward
+    really loads the shared cloud."""
+    from repro.core.problems import metro_jobs
+
+    instances = [metro_jobs(np.random.default_rng(5000 + i), n=n)
+                 for i in range(wards)]
+    mpt = {CC: cloud_machines, ES: edge_machines}
+    # warm the naive batched search's compile cache at the real shape
+    # (max_sweeps=0: the sweeps dispatch per §3.3 — python loop on CPU,
+    # nothing to warm; one batched device call per sweep on accelerators)
+    scheduler.search_fleet(instances, machines_per_tier=mpt,
+                           max_count=1, max_sweeps=0)
+    t0 = time.perf_counter()
+    plan = scheduler.search_fleet(instances, machines_per_tier=mpt,
+                                  max_count=max_count,
+                                  max_sweeps=max_sweeps)
+    seconds = time.perf_counter() - t0
+    return {
+        "wards": wards, "n": n,
+        "cloud_machines": cloud_machines, "edge_machines": edge_machines,
+        "max_count": max_count, "max_sweeps": max_sweeps,
+        "naive_reported": plan.naive_reported,
+        "naive_fleet_true": plan.naive_fleet.weighted_sum,
+        "fleet_true": plan.fleet.weighted_sum,
+        "contention_gap": plan.contention_gap,
+        "gap_closed": plan.gap_closed,
+        "improvement_vs_naive": plan.naive_fleet.weighted_sum
+        / max(plan.fleet.weighted_sum, 1e-9),
+        "sweeps": plan.sweeps,
+        "seconds": seconds,
+        "wards_per_s": wards / seconds,
+    }
+
+
 def bench_scheduler_scale(with_online_scenarios: bool = False,
                           out_path: str | None = None):
     rng = np.random.default_rng(0)
     rows, csv = [], []
     report = {"bench": "scheduler_scale", "backend": jax.default_backend(),
               "head_to_head": [], "eval_throughput": {}, "quality": {},
-              "online": {}, "batched": {}}
+              "online": {}, "batched": {}, "contention": {}}
 
     # 1) Algorithm-2 head-to-head across implementations and scales
     for row in bench_head_to_head():
@@ -283,6 +329,19 @@ def bench_scheduler_scale(with_online_scenarios: bool = False,
         f"wards_per_s={b['wards_per_s_batched']:.0f};"
         f"speedup_vs_sequential={b['speedup_batched_vs_sequential']:.1f}x;"
         f"parity_mismatches={b['parity_mismatches']}")
+
+    # 5b) cross-ward shared-cloud contention (DESIGN.md §9)
+    report["contention"] = bench_contention()
+    c = report["contention"]
+    rows.append(("contention_wards", c["wards"], c["seconds"],
+                 c["wards_per_s"]))
+    csv.append(
+        f"sched_contention_B{c['wards']}_n{c['n']},"
+        f"{c['seconds']*1e6:.0f},"
+        f"gap={c['contention_gap']:.3f}x;"
+        f"gap_closed={c['gap_closed']:.0%};"
+        f"sweeps={c['sweeps']};"
+        f"wards_per_s={c['wards_per_s']:.1f}")
 
     # 6) per-scenario online competitive ratios (slower; gated by --online)
     if with_online_scenarios:

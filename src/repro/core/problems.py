@@ -108,6 +108,27 @@ ONLINE_SCENARIOS = {
 }
 
 
+def metro_jobs(rng: np.random.Generator, n: int = 100,
+               horizon: float = 50.0) -> List[JobSpec]:
+    """Cloud-attractive ward workload in the paper's Table VI cost regime
+    (cloud fast but far, edge moderate, device slow): proc_cloud 2-8,
+    trans_cloud 10-40, proc_edge 4-14, trans_edge 1-8, proc_device 20-70.
+
+    With these magnitudes the shared metropolitan cloud carries real load
+    from every ward, which is exactly the regime where per-ward-independent
+    planning double-books it — the contention benchmark's generator
+    (DESIGN.md §9)."""
+    return [JobSpec(
+        name=f"J{i}", release=float(rng.uniform(0, horizon)),
+        weight=float(rng.integers(1, 4)),
+        proc={CC: float(rng.integers(2, 9)),
+              ES: float(rng.integers(4, 15)),
+              ED: float(rng.integers(20, 71))},
+        trans={CC: float(rng.integers(10, 41)),
+               ES: float(rng.integers(1, 9)), ED: 0.0})
+        for i in range(n)]
+
+
 def ward_batch(rng: np.random.Generator, wards: int,
                n_lo: int = 8, n_hi: int = 24,
                scenario: str = "poisson") -> List[List[JobSpec]]:

@@ -379,15 +379,17 @@ def _device_round(assign, dev_end, dev_resp, dev_wresp, oi: int):
     return stat, stat[:, None] + jnp.where(member, -con, con)
 
 
-def _round_batched(assign, valid, tc, dev, oi: int):
+def _round_batched(assign, movable, tc, dev, oi: int):
     """One delta-evaluated neighbourhood round for the whole batch.
 
     Returns ((B,) incumbent objectives, (B, n, 3) candidate values):
     entry (b, k, m) is the exact objective of instance b with job k moved
     to machine m, assembled from the two affected tiers' toggled stats
-    and the incumbent's third-tier stat. No-op moves and phantom
-    (padding) jobs score +inf. tc holds the stacked (B, 2, n) per-tier
-    queue-order constants; dev the device-tier constants."""
+    and the incumbent's third-tier stat. No-op moves and non-movable jobs
+    — phantom padding AND frozen background jobs, which participate fully
+    in every queue evaluation but may never be reassigned (DESIGN.md §9)
+    — score +inf. tc holds the stacked (B, 2, n) per-tier queue-order
+    constants; dev the device-tier constants."""
     B, n = assign.shape
     mask_T = jnp.take_along_axis(
         jnp.stack([assign == 0, assign == 1], axis=1), tc["order"], axis=2)
@@ -417,7 +419,7 @@ def _round_batched(assign, valid, tc, dev, oi: int):
             d.transpose(0, 2, 1)
     vals = jnp.where(jnp.arange(3)[None, None, :] == assign[:, :, None],
                      jnp.inf, vals)
-    vals = jnp.where(valid[:, :, None], vals, jnp.inf)
+    vals = jnp.where(movable[:, :, None], vals, jnp.inf)
     return total, vals
 
 
@@ -468,7 +470,7 @@ def _greedy_assign_batched(rel, w, proc, trans, valid, busy_c, busy_e):
 
 
 @functools.partial(jax.jit, static_argnames=("objective", "greedy_init"))
-def _tabu_run_batched(assign0, rel, w, proc, trans, valid, max_rounds,
+def _tabu_run_batched(assign0, rel, w, proc, trans, movable, max_rounds,
                       busy_c, busy_e, objective: str,
                       greedy_init: bool = False):
     """Steepest descent over the n x 3 single-move neighbourhood for B
@@ -485,7 +487,9 @@ def _tabu_run_batched(assign0, rel, w, proc, trans, valid, max_rounds,
     oi = _OBJ_IDX[objective]
     B, n = assign0.shape
     if greedy_init:
-        assign0 = _greedy_assign_batched(rel, w, proc, trans, valid,
+        # greedy init is only reachable when every non-phantom job is
+        # movable (frozen jobs require an explicit initial assignment)
+        assign0 = _greedy_assign_batched(rel, w, proc, trans, movable,
                                          busy_c, busy_e)
     m_mm = max(busy_c.shape[1], busy_e.shape[1])
     busy_T = jnp.stack([
@@ -513,7 +517,7 @@ def _tabu_run_batched(assign0, rel, w, proc, trans, valid, max_rounds,
            "wresp": w * (dev_end - rel)}
 
     def round_all(assign):
-        return _round_batched(assign, valid, tc, dev, oi)
+        return _round_batched(assign, movable, tc, dev, oi)
 
     binds = jnp.arange(B)
 
@@ -593,7 +597,9 @@ def tabu_search_batched(batch_jobs: Sequence[Sequence[JobSpec]],
                         *, max_rounds: int | None = None,
                         objective: str = "weighted",
                         machines_per_tier=(1, 1),
-                        busy_until=None):
+                        busy_until=None,
+                        frozen=None,
+                        pad_to: int | None = None):
     """Plan B independent ward instances in ONE jitted device call.
 
     batch_jobs: B job lists; sizes may differ — instances are padded to
@@ -604,6 +610,17 @@ def tabu_search_batched(batch_jobs: Sequence[Sequence[JobSpec]],
     fleets are padded to the per-tier maximum with phantom machines whose
     initial busy time is +inf, so FIFO dispatch never selects them.
     busy_until: optional per-ward (cloud_times, edge_times) pairs.
+
+    frozen: optional per-ward boolean masks (DESIGN.md §9). A frozen job
+    participates FULLY in every queue evaluation — it occupies its
+    machine pool and its response counts toward the objective — but every
+    move on it scores +inf, so the search can never reassign it. This is
+    how the fleet fixed-point solver shows ward b the other wards'
+    committed shared-tier jobs as background occupancy. Frozen jobs
+    require an explicit ``initial`` (the greedy initialiser would
+    reassign them). pad_to: pad instances to at least this many job slots
+    — contention sweeps bucket their background size with it so the
+    compiled shape stays stable while the background churns.
 
     Returns (objectives (B,) float ndarray, [per-ward (n_i,) int arrays]).
     Termination is per-instance: a ward that reaches a 1-move local
@@ -619,6 +636,11 @@ def tabu_search_batched(batch_jobs: Sequence[Sequence[JobSpec]],
         return np.zeros((0,)), []
     sizes = [len(jobs) for jobs in batch_jobs]
     n_max = max(sizes)
+    if pad_to is not None:
+        n_max = max(n_max, int(pad_to))
+    if frozen is not None and initial is None:
+        raise ValueError("frozen jobs require an explicit initial "
+                         "assignment (greedy init would reassign them)")
     mpts = _per_instance_mpt(machines_per_tier, B)
     m_max = (max(c for c, _ in mpts), max(e for _, e in mpts))
     if busy_until is None:
@@ -630,7 +652,7 @@ def tabu_search_batched(batch_jobs: Sequence[Sequence[JobSpec]],
     w = np.zeros((B, n_max), np.float32)
     proc = np.zeros((B, n_max, N_MACHINES), np.float32)
     trans = np.zeros((B, n_max, N_MACHINES), np.float32)
-    valid = np.zeros((B, n_max), bool)
+    movable = np.zeros((B, n_max), bool)
     assign0 = np.full((B, n_max), 2, np.int32)  # phantoms pinned to device
     busy_c = np.full((B, m_max[0]), np.inf, np.float32)
     busy_e = np.full((B, m_max[1]), np.inf, np.float32)
@@ -643,13 +665,19 @@ def tabu_search_batched(batch_jobs: Sequence[Sequence[JobSpec]],
             continue
         rel[b, :nb], w[b, :nb], proc[b, :nb], trans[b, :nb] = \
             _specs_to_np(jobs)
-        valid[b, :nb] = True
+        movable[b, :nb] = True
+        if frozen is not None and frozen[b] is not None:
+            fr = np.asarray(list(frozen[b]), bool)
+            if fr.shape != (nb,):
+                raise ValueError(f"ward {b}: frozen mask has shape "
+                                 f"{fr.shape}, expected ({nb},)")
+            movable[b, :nb] &= ~fr
         if initial is not None:
             assign0[b, :nb] = list(initial[b])
     if max_rounds is None:
         max_rounds = 50 * n_max
     assign, totals, _ = _tabu_run_batched(
-        assign0, rel, w, proc, trans, valid, np.int32(max_rounds),
+        assign0, rel, w, proc, trans, movable, np.int32(max_rounds),
         busy_c, busy_e, objective, greedy_init=initial is None)
     assign = np.asarray(assign)
     return (np.asarray(totals, np.float64),
@@ -661,7 +689,7 @@ def tabu_search_jax(jobs: Sequence[JobSpec],
                     *, max_rounds: int | None = None,
                     objective: str = "weighted",
                     machines_per_tier: Tuple[int, int] = (1, 1),
-                    busy_until=None):
+                    busy_until=None, frozen=None):
     """Fully-jitted Algorithm-2 neighbourhood search. Returns
     (best objective value, best assignment as an (n,) int array).
 
@@ -682,7 +710,8 @@ def tabu_search_jax(jobs: Sequence[JobSpec],
         max_rounds=max_rounds, objective=objective,
         machines_per_tier=(int(machines_per_tier[0]),
                            int(machines_per_tier[1])),
-        busy_until=None if busy_until is None else [busy_until])
+        busy_until=None if busy_until is None else [busy_until],
+        frozen=None if frozen is None else [frozen])
     return float(vals[0]), assigns[0]
 
 

@@ -57,6 +57,13 @@ class ScheduledJob:
         return self.end - self.job.release
 
 
+def schedule_objective(sched, objective: str = "weighted") -> float:
+    """One of the three reported objectives off a Schedule/FleetSchedule."""
+    return {"weighted": sched.weighted_sum,
+            "unweighted": sched.unweighted_sum,
+            "last": sched.last_end}[objective]
+
+
 @dataclass(frozen=True)
 class Schedule:
     entries: List[ScheduledJob]
@@ -66,6 +73,9 @@ class Schedule:
 
     def assignment(self) -> List[str]:
         return [e.machine for e in self.entries]
+
+    def objective(self, objective: str = "weighted") -> float:
+        return schedule_objective(self, objective)
 
 
 def machine_free_times(busy_until: Mapping[str, Sequence[float]] | None,
@@ -86,6 +96,21 @@ def machine_free_times(busy_until: Mapping[str, Sequence[float]] | None,
     return [0.0] * (machines - len(vals)) + vals
 
 
+def _fifo_pool(items, free: List[float]):
+    """FIFO dispatch of one machine POOL: ``items`` iterates (arrival,
+    proc) in queue order, ``free`` is the pool's initial machine
+    free-time vector (consumed). Yields (arrival, start, end) per item —
+    the C5 semantics every evaluator in this module shares: each job pops
+    the earliest-free machine and starts at max(arrival, free)."""
+    heapq.heapify(free)
+    for arr, proc in items:
+        avail = heapq.heappop(free)
+        start = arr if arr > avail else avail
+        end = start + proc
+        heapq.heappush(free, end)
+        yield arr, start, end
+
+
 def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
              machines_per_tier: Mapping[str, int] | None = None,
              busy_until: Mapping[str, Sequence[float]] | None = None
@@ -96,7 +121,9 @@ def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
     already occupied by previously committed jobs (DESIGN.md §7). A job
     cannot start on a machine before that machine's entry.
     """
-    assert len(jobs) == len(assignment)
+    if len(jobs) != len(assignment):
+        raise ValueError(f"{len(jobs)} jobs but {len(assignment)} "
+                         f"assignment entries")
     machines_per_tier = machines_per_tier or {CC: 1, ES: 1}
     entries: List[ScheduledJob | None] = [None] * len(jobs)
 
@@ -115,23 +142,173 @@ def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
                            jobs[i].release, i))
         free = machine_free_times(busy_until, tier,
                                   machines_per_tier.get(tier, 1))
-        heapq.heapify(free)
-        for i in queue:
-            job = jobs[i]
-            arr = job.release + job.trans[tier]
-            avail = heapq.heappop(free)
-            start = max(arr, avail)
-            end = start + job.proc[tier]
-            heapq.heappush(free, end)
-            entries[i] = ScheduledJob(job, tier, arr, start, end)
+        for i, (arr, start, end) in zip(queue, _fifo_pool(
+                ((jobs[i].release + jobs[i].trans[tier], jobs[i].proc[tier])
+                 for i in queue), free)):
+            entries[i] = ScheduledJob(jobs[i], tier, arr, start, end)
 
     done = [e for e in entries if e is not None]
-    assert len(done) == len(jobs)
+    if len(done) != len(jobs):
+        raise ValueError("assignment names an unknown tier: "
+                         f"{sorted(set(assignment) - set(MACHINES))}")
     weighted = sum(e.job.weight * e.response for e in done)
     unweighted = sum(e.response for e in done)
     last = max(e.end for e in done) if done else 0.0
     return Schedule(entries=done, weighted_sum=weighted,
                     unweighted_sum=unweighted, last_end=last)
+
+
+# --------------------------------------------------- fleet-true evaluation
+@dataclass(frozen=True)
+class FleetSchedule:
+    """A joint multi-ward plan scored on the REAL fleet (DESIGN.md §9):
+    shared tiers are one machine pool with a merged FIFO queue across all
+    wards, so the per-ward numbers here are achievable simultaneously —
+    unlike B independent `simulate` calls, which silently double-book the
+    shared servers."""
+    wards: List[Schedule]            # per-ward entries with fleet-true times
+    weighted_sum: float
+    unweighted_sum: float
+    last_end: float
+
+    def objective(self, objective: str = "weighted") -> float:
+        return schedule_objective(self, objective)
+
+
+def _fleet_mpts(machines_per_tier, B: int,
+                shared_tiers: Tuple[str, ...]) -> List[Dict[str, int]]:
+    """-> per-ward {tier: count} dicts from one mapping or a per-ward
+    sequence; counts of a SHARED tier must agree across wards (there is
+    exactly one pool)."""
+    if machines_per_tier is None or isinstance(machines_per_tier, Mapping):
+        mpts = [dict(machines_per_tier or {CC: 1, ES: 1})] * B
+    else:
+        mpts = [dict(m or {CC: 1, ES: 1}) for m in machines_per_tier]
+        if len(mpts) != B:
+            raise ValueError(f"machines_per_tier lists {len(mpts)} fleets "
+                             f"for {B} wards")
+        for tier in shared_tiers:
+            counts = {m.get(tier, 1) for m in mpts}
+            if len(counts) > 1:
+                raise ValueError(
+                    f"shared tier {tier!r} is one pool but wards disagree "
+                    f"on its machine count: {sorted(counts)}")
+    return mpts
+
+
+def simulate_fleet(ward_jobs: Sequence[Sequence[JobSpec]],
+                   ward_assignments: Sequence[Sequence[str]],
+                   machines_per_tier=None,
+                   busy_until: Mapping[str, Sequence[float]] | None = None,
+                   ward_busy_until=None,
+                   shared_tiers: Tuple[str, ...] = (CC,)) -> FleetSchedule:
+    """Evaluate a JOINT multi-ward plan under C1-C5 on the real fleet.
+
+    Machine pools (DESIGN.md §9): every tier in ``shared_tiers`` (default:
+    the metropolitan cloud) is ONE pool serving all wards through a single
+    merged FIFO queue, ordered by (arrival, release, ward, index) — exactly
+    the queue of the wards-concatenated single instance, so this is the
+    ground truth that per-ward-independent planning double-books. Shared
+    tiers not in ``shared_tiers`` (default: edge) are per-ward pools; the
+    device tier stays private per job.
+
+    machines_per_tier: one {tier: count} mapping for every ward or a
+    per-ward sequence (shared-tier counts must agree — one pool).
+    busy_until: {tier: [free times]} for the SHARED pools.
+    ward_busy_until: optional per-ward {tier: [free times]} for the
+    per-ward pools.
+    shared_tiers: which of (cloud, edge) are metropolitan-shared; the
+    private device tier cannot be shared.
+    """
+    B = len(ward_jobs)
+    if len(ward_assignments) != B:
+        raise ValueError(f"{B} wards but {len(ward_assignments)} "
+                         f"assignments")
+    for b, (jobs, assign) in enumerate(zip(ward_jobs, ward_assignments)):
+        if len(jobs) != len(assign):
+            raise ValueError(f"ward {b}: {len(jobs)} jobs but "
+                             f"{len(assign)} assignment entries")
+    bad = set(shared_tiers) - set(_SHARED)
+    if bad:
+        raise ValueError(f"only cloud/edge tiers can be pooled: {bad}")
+    mpts = _fleet_mpts(machines_per_tier, B, shared_tiers)
+    busys = [None] * B if ward_busy_until is None else list(ward_busy_until)
+    if len(busys) != B:
+        raise ValueError(f"{len(busys)} ward busy vectors for {B} wards")
+    # occupancy must arrive through the right channel — a busy_until entry
+    # for a per-ward tier (or ward_busy_until for a pooled tier) would be
+    # silently ignored and understate every response time
+    stray = [t for t in (busy_until or {}) if t not in shared_tiers]
+    if stray:
+        raise ValueError(
+            f"busy_until names non-shared tiers {stray}; per-ward pool "
+            f"occupancy goes in ward_busy_until")
+    stray = sorted({t for wb in busys for t in (wb or {})
+                    if t in shared_tiers})
+    if stray:
+        raise ValueError(
+            f"ward_busy_until names shared tiers {stray}; the shared "
+            f"pools' occupancy goes in busy_until")
+
+    entries: List[List[ScheduledJob | None]] = [
+        [None] * len(jobs) for jobs in ward_jobs]
+
+    # private tier: no queueing, per ward exactly as `simulate`
+    for b, (jobs, assign) in enumerate(zip(ward_jobs, ward_assignments)):
+        for i, (job, tier) in enumerate(zip(jobs, assign)):
+            if tier == ED:
+                arr = job.release + job.trans.get(ED, 0.0)
+                entries[b][i] = ScheduledJob(job, ED, arr, arr,
+                                             arr + job.proc[ED])
+
+    def run_pool(tier: str, members, free: List[float]) -> None:
+        """members: (b, i) pairs; dispatches the pool's merged queue."""
+        queue = sorted(members, key=lambda bi: (
+            ward_jobs[bi[0]][bi[1]].release
+            + ward_jobs[bi[0]][bi[1]].trans[tier],
+            ward_jobs[bi[0]][bi[1]].release, bi))
+        timed = _fifo_pool(
+            ((ward_jobs[b][i].release + ward_jobs[b][i].trans[tier],
+              ward_jobs[b][i].proc[tier]) for b, i in queue), free)
+        for (b, i), (arr, start, end) in zip(queue, timed):
+            entries[b][i] = ScheduledJob(ward_jobs[b][i], tier, arr,
+                                         start, end)
+
+    for tier in _SHARED:
+        if tier in shared_tiers:
+            if not mpts:                       # B == 0: nothing to pool
+                continue
+            run_pool(tier,
+                     [(b, i) for b in range(B)
+                      for i, t in enumerate(ward_assignments[b])
+                      if t == tier],
+                     machine_free_times(busy_until, tier,
+                                        mpts[0].get(tier, 1)))
+        else:
+            for b in range(B):
+                run_pool(tier,
+                         [(b, i) for i, t in enumerate(ward_assignments[b])
+                          if t == tier],
+                         machine_free_times(busys[b], tier,
+                                            mpts[b].get(tier, 1)))
+
+    wards = []
+    for b, jobs in enumerate(ward_jobs):
+        done = [e for e in entries[b] if e is not None]
+        if len(done) != len(jobs):
+            raise ValueError(
+                f"ward {b} assignment names an unknown tier: "
+                f"{sorted(set(ward_assignments[b]) - set(MACHINES))}")
+        wards.append(Schedule(
+            entries=done,
+            weighted_sum=sum(e.job.weight * e.response for e in done),
+            unweighted_sum=sum(e.response for e in done),
+            last_end=max((e.end for e in done), default=0.0)))
+    return FleetSchedule(
+        wards=wards,
+        weighted_sum=sum(s.weighted_sum for s in wards),
+        unweighted_sum=sum(s.unweighted_sum for s in wards),
+        last_end=max((s.last_end for s in wards), default=0.0))
 
 
 # ------------------------------------------------- incremental evaluation
@@ -161,7 +338,9 @@ class ScheduleState:
     def __init__(self, jobs: Sequence[JobSpec], assignment: Sequence[str],
                  machines_per_tier: Mapping[str, int] | None = None,
                  busy_until: Mapping[str, Sequence[float]] | None = None):
-        assert len(jobs) == len(assignment)
+        if len(jobs) != len(assignment):
+            raise ValueError(f"{len(jobs)} jobs but {len(assignment)} "
+                             f"assignment entries")
         self.jobs = list(jobs)
         self.assign = list(assignment)
         self.machines = dict(machines_per_tier or {CC: 1, ES: 1})

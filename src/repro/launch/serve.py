@@ -90,6 +90,15 @@ def _setup_fleet(tiers_kind, cloud_machines, edge_machines):
     return tiers, machines_per_tier, engines, calibrate(tiers, engines)
 
 
+def _validate_quantum(quantum) -> None:
+    """An explicit quantum must be a positive time unit. (``quantum or
+    min(...)`` silently replaced an explicit 0.0 with the derived default —
+    a ``None`` check keeps falsy-but-explicit values visible and rejected.)
+    """
+    if not quantum > 0:
+        raise ValueError(f"quantum must be > 0, got {quantum!r}")
+
+
 def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
         execute=True, quantum=None, verbose=True, jax_threshold=None,
         cloud_machines=None, edge_machines=None):
@@ -101,8 +110,10 @@ def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
     tiers, machines_per_tier, engines, cost_model = _setup_fleet(
         tiers_kind, cloud_machines, edge_machines)
     jobs = make_jobs(rng, patients, horizon)
-    quantum = quantum or min(
-        min(cost_model.times(j)[t][1] for t in tiers) for j in jobs)
+    if quantum is None:
+        quantum = min(
+            min(cost_model.times(j)[t][1] for t in tiers) for j in jobs)
+    _validate_quantum(quantum)
     specs = jobs_to_specs(cost_model, jobs, normalize=quantum)
 
     table = scheduler.strategy_table(specs, jax_threshold=jax_threshold,
@@ -139,32 +150,78 @@ def run(patients=10, horizon=30.0, seed=0, tiers_kind="paper",
 
 def run_wards(wards=4, patients=10, horizon=30.0, seed=0,
               tiers_kind="paper", quantum=None, verbose=True,
-              cloud_machines=None, edge_machines=None, min_batch=None):
-    """Multi-hospital fleet mode: plan `wards` independent ward instances
-    in ONE batched device call (scheduler.search_batched, DESIGN.md §8).
+              cloud_machines=None, edge_machines=None, min_batch=None,
+              contention=False, max_sweeps=8):
+    """Multi-hospital fleet mode: plan `wards` ward instances in ONE
+    batched device call (scheduler.search_batched, DESIGN.md §8).
 
     The metropolitan cloud spec is shared — every ward sees the same
     cloud machine count — while each ward owns its edge servers and its
-    patients' end devices. Planning is per-ward independent: a ward
-    optimises against the full cloud fleet, so cross-ward cloud
-    contention is not yet modelled (ROADMAP open item). Calibration runs
-    once (the cost model describes the shared hardware), and one quantum
-    (the fleet-wide minimum) keeps every ward's time unit comparable.
+    patients' end devices. Calibration runs once (the cost model
+    describes the shared hardware), and one quantum (the fleet-wide
+    minimum) keeps every ward's time unit comparable.
 
-    Returns (list of per-ward Schedules, wall seconds of the batched
-    planning call)."""
+    contention=False (default): planning is per-ward independent — a ward
+    optimises against the full cloud fleet, so B wards silently
+    double-book the shared cloud servers and the per-ward numbers are
+    only achievable one ward at a time.
+
+    contention=True (DESIGN.md §9): additionally rescore the independent
+    plans with the fleet-true evaluator (`simulate_fleet` — one merged
+    shared-cloud FIFO queue) and run `scheduler.search_fleet`'s
+    contention-aware fixed-point sweeps; reports the naive claimed
+    scores, the fleet-true scores, the contention gap, and the gap
+    recovered.
+
+    Returns (list of per-ward Schedules, wall seconds of the planning
+    call) — in contention mode, the per-ward schedules of the fleet-true
+    plan (entries carry merged-queue times) and a third element, the
+    FleetPlan."""
     rng = np.random.default_rng(seed)
     tiers, machines_per_tier, _, cost_model = _setup_fleet(
         tiers_kind, cloud_machines, edge_machines)
 
     ward_jobs = [make_jobs(rng, patients, horizon) for _ in range(wards)]
-    quantum = quantum or min(
-        min(cost_model.times(j)[t][1] for t in tiers)
-        for jobs in ward_jobs for j in jobs)
+    if quantum is None:
+        quantum = min(
+            min(cost_model.times(j)[t][1] for t in tiers)
+            for jobs in ward_jobs for j in jobs)
+    _validate_quantum(quantum)
     ward_specs = [jobs_to_specs(cost_model, jobs, normalize=quantum)
                   for jobs in ward_jobs]
 
     import time
+    if contention:
+        # warm the naive batched search's compile cache at the real shape
+        # (max_sweeps=0 plans nothing beyond the naive stage), so the
+        # reported time is planning throughput, not XLA tracing — same
+        # policy as the independent-mode branch below
+        scheduler.search_fleet(
+            ward_specs, machines_per_tier=machines_per_tier,
+            min_batch=min_batch, max_count=1, max_sweeps=0)
+        t0 = time.perf_counter()
+        plan = scheduler.search_fleet(
+            ward_specs, machines_per_tier=machines_per_tier,
+            min_batch=min_batch, max_sweeps=max_sweeps)
+        seconds = time.perf_counter() - t0
+        if verbose:
+            print(f"{'ward':>4s} {'jobs':>5s} {'naive':>9s} "
+                  f"{'fleet-true':>10s}  (time unit = {quantum*1e3:.3f} ms)")
+            for i, (naive_s, fleet_s) in enumerate(
+                    zip(plan.naive_fleet.wards, plan.fleet.wards)):
+                print(f"{i:4d} {len(fleet_s.entries):5d} "
+                      f"{naive_s.weighted_sum:9.0f} "
+                      f"{fleet_s.weighted_sum:10.0f}")
+            print(f"independent plans claim   {plan.naive_reported:9.0f}")
+            print(f"  ...but really score     "
+                  f"{plan.naive_fleet.weighted_sum:9.0f} on the shared "
+                  f"fleet (contention gap {plan.contention_gap:.3f}x)")
+            print(f"fleet-true after {plan.sweeps} sweeps: "
+                  f"{plan.fleet.weighted_sum:9.0f} "
+                  f"({plan.gap_closed:.0%} of the gap recovered) "
+                  f"in {seconds*1e3:.1f} ms")
+        return plan.fleet.wards, seconds, plan
+
     # compile once at the real (B, n_max, fleet) shape so the reported
     # rate is the steady-state replanning throughput, not XLA tracing;
     # the sequential fallback path compiles nothing, so skip the warm-up
@@ -210,13 +267,22 @@ def main():
                     help="multi-hospital mode: plan this many wards in one "
                          "batched device call (shared cloud, per-ward "
                          "edge/device fleets); 0 = single-ward mode")
+    ap.add_argument("--contention", action="store_true",
+                    help="with --wards: score plans on the REAL shared "
+                         "cloud (merged FIFO queue) and run the "
+                         "contention-aware fixed-point search; reports "
+                         "naive vs fleet-true scores and the gap "
+                         "(DESIGN.md §9)")
     args = ap.parse_args()
+    if args.contention and args.wards <= 0:
+        ap.error("--contention requires --wards N (N > 0)")
     if args.wards > 0:
         run_wards(wards=args.wards, patients=args.patients,
                   horizon=args.horizon, seed=args.seed,
                   tiers_kind=args.tiers,
                   cloud_machines=args.cloud_machines,
-                  edge_machines=args.edge_machines)
+                  edge_machines=args.edge_machines,
+                  contention=args.contention)
     else:
         run(patients=args.patients, horizon=args.horizon, seed=args.seed,
             tiers_kind=args.tiers, execute=not args.no_execute,
