@@ -26,7 +26,12 @@ hardware — regenerate the baseline when the CI host changes):
     benchmark fleet must exhibit a nonzero contention gap (> 1 — if it
     does not, the benchmark no longer measures anything) and the fleet
     search must strictly beat the naive plans on the fleet-true
-    objective.
+    objective;
+  * metro ``events_per_s`` and ``miss_rate_improvement`` — the streaming
+    traffic engine must keep its event throughput and the tabu-vs-greedy
+    deadline miss-rate win (DESIGN.md §10); plus the hard invariant that
+    the improvement stays strictly > 1 whenever a fresh metro section
+    exists.
 
 Invocation (documented in ROADMAP.md):
 
@@ -77,6 +82,15 @@ def _contention_metrics(report: dict) -> dict:
     return out
 
 
+def _metro_metrics(report: dict) -> dict:
+    m = report.get("metro") or {}
+    out = {}
+    for key in ("events_per_s", "miss_rate_improvement"):
+        if m.get(key):
+            out[f"metro/{key}"] = m[key]
+    return out
+
+
 def compare(committed: dict, fresh: dict, tolerance: float = 0.30
             ) -> list:
     """-> list of human-readable regression strings (empty == pass).
@@ -87,7 +101,7 @@ def compare(committed: dict, fresh: dict, tolerance: float = 0.30
     """
     problems = []
     for metrics in (_head_to_head_metrics, _batched_metrics,
-                    _contention_metrics):
+                    _contention_metrics, _metro_metrics):
         com, fre = metrics(committed), metrics(fresh)
         for key, floor in com.items():
             got = fre.get(key)
@@ -115,6 +129,20 @@ def compare(committed: dict, fresh: dict, tolerance: float = 0.30
                 f"contention: fleet_true {cont.get('fleet_true')} does not "
                 f"strictly beat naive_fleet_true "
                 f"{cont.get('naive_fleet_true')}")
+    metro = fresh.get("metro") or {}
+    if metro:
+        # hard invariant (DESIGN.md §10): committed tabu replanning must
+        # STRICTLY beat greedy commit-and-hold on SLA deadline miss-rate
+        # on the benchmark traffic — improvement <= 1 means the metro
+        # subsystem's reason to exist has regressed, whatever the floors.
+        # A None improvement means greedy itself missed nothing (the
+        # traffic no longer stresses anyone), which is vacuous, not a
+        # regression.
+        imp = metro.get("miss_rate_improvement", 0.0)
+        if imp is not None and not imp > 1.0:
+            problems.append(
+                f"metro/miss_rate_improvement: {imp} <= 1 (tabu replan "
+                f"no longer beats greedy on deadline miss-rate)")
     return problems
 
 

@@ -228,13 +228,75 @@ def bench_contention(wards=32, n=100, cloud_machines=4, edge_machines=2,
     }
 
 
+def bench_metro(wards=4, hours=2.0, seed=0):
+    """Streaming metro traffic (DESIGN.md §10): the canonical scenario
+    (`metro.traces.default_scenario` — diurnal + surge arrivals, cloud
+    failures, elastic capacity) replayed under the greedy, tabu-replan
+    and fleet fixed-point policies on identical traces. Guarded metrics:
+    engine throughput in events/s (the tabu run — the replanning hot
+    path) and the tabu-vs-greedy deadline miss-rate improvement, which
+    `check_regression.py` additionally requires to stay strictly > 1
+    (replanning must actually beat commit-and-hold)."""
+    from repro.launch.serve import run_metro
+
+    out = run_metro(wards=wards, hours=hours, seed=seed, verbose=False)
+    g, t, f = out["greedy"], out["tabu"], out["fleet"]
+    # improvement is vacuous when greedy is already perfect (None, so the
+    # gate skips it rather than hard-failing a flawless run), and a
+    # perfect tabu run is floored at half-a-missed-job so one committed
+    # baseline can't demand a near-infinite ratio forever after
+    g_miss, t_miss = g["miss_rate"], t["miss_rate"]
+    improvement = None if g_miss == 0 else \
+        g_miss / max(t_miss, 0.5 / max(g["completions"], 1))
+    return {
+        "wards": wards, "hours": hours, "seed": seed,
+        "jobs": g["completions"],
+        "events_tabu": t["events"],
+        "events_per_s": t["events_per_s"],
+        "miss_rate_greedy": g_miss,
+        "miss_rate_tabu": t_miss,
+        "miss_rate_fleet": f["miss_rate"],
+        "miss_rate_improvement": improvement,
+        "p50": {k: v["p50"] for k, v in out.items()},
+        "p99": {k: v["p99"] for k, v in out.items()},
+        "utilization_tabu": t["utilization"],
+    }
+
+
+def bench_online_fleet(seeds=3, wards=4, n=10, cloud_machines=2,
+                       edge_machines=2):
+    """Online fleet replanning vs the clairvoyant fixed point
+    (`online.competitive_ratio_fleet`, DESIGN.md §9 follow-up): the
+    price of event-by-event ward-aware replanning against
+    `search_fleet`'s fleet-true plan on the same shared cloud, per seed
+    over the contention benchmark's `metro_jobs` regime."""
+    from repro.core import online
+    from repro.core.problems import metro_jobs
+
+    mpt = {CC: cloud_machines, ES: edge_machines}
+    runs = []
+    for s in range(seeds):
+        ward_jobs = [metro_jobs(
+            np.random.default_rng(8000 + s * wards + b), n=n, horizon=30.0)
+            for b in range(wards)]
+        runs.append(online.competitive_ratio_fleet(
+            ward_jobs, machines_per_tier=mpt))
+    ratios = [r["ratio"] for r in runs]
+    return {"wards": wards, "n": n,
+            "cloud_machines": cloud_machines,
+            "edge_machines": edge_machines,
+            "runs": runs,
+            "mean_ratio": float(np.mean(ratios)),
+            "max_ratio": float(np.max(ratios))}
+
+
 def bench_scheduler_scale(with_online_scenarios: bool = False,
                           out_path: str | None = None):
     rng = np.random.default_rng(0)
     rows, csv = [], []
     report = {"bench": "scheduler_scale", "backend": jax.default_backend(),
               "head_to_head": [], "eval_throughput": {}, "quality": {},
-              "online": {}, "batched": {}, "contention": {}}
+              "online": {}, "batched": {}, "contention": {}, "metro": {}}
 
     # 1) Algorithm-2 head-to-head across implementations and scales
     for row in bench_head_to_head():
@@ -343,6 +405,21 @@ def bench_scheduler_scale(with_online_scenarios: bool = False,
         f"sweeps={c['sweeps']};"
         f"wards_per_s={c['wards_per_s']:.1f}")
 
+    # 5c) streaming metro traffic: policy comparison + engine throughput
+    # (DESIGN.md §10)
+    report["metro"] = bench_metro()
+    m = report["metro"]
+    rows.append(("metro_events", m["events_tabu"], 0.0,
+                 m["events_per_s"]))
+    imp = m["miss_rate_improvement"]
+    csv.append(
+        f"sched_metro_B{m['wards']}_{m['hours']:g}h,0,"
+        f"miss_greedy={m['miss_rate_greedy']:.3f};"
+        f"miss_tabu={m['miss_rate_tabu']:.3f};"
+        f"miss_fleet={m['miss_rate_fleet']:.3f};"
+        f"improvement={'vacuous' if imp is None else f'{imp:.2f}x'};"
+        f"events_per_s={m['events_per_s']:.0f}")
+
     # 6) per-scenario online competitive ratios (slower; gated by --online)
     if with_online_scenarios:
         scen = bench_online_scenarios()
@@ -353,6 +430,12 @@ def bench_scheduler_scale(with_online_scenarios: bool = False,
                     f"sched_online_{name}_{fleet},0,"
                     f"greedy={ratios['greedy']['mean']:.3f};"
                     f"tabu_replan={ratios['tabu']['mean']:.3f}")
+        fleet_cr = bench_online_fleet()
+        report["online"]["fleet"] = fleet_cr
+        csv.append(
+            f"sched_online_fleet_B{fleet_cr['wards']}_n{fleet_cr['n']},0,"
+            f"mean_ratio={fleet_cr['mean_ratio']:.3f};"
+            f"max_ratio={fleet_cr['max_ratio']:.3f}")
 
     out_path = out_path or BENCH_JSON
     with open(out_path, "w") as f:

@@ -294,6 +294,36 @@ def competitive_ratio(jobs: Sequence[JobSpec], replan: str = "tabu", *,
     return online.weighted_sum / max(offline.weighted_sum, 1e-9)
 
 
+def competitive_ratio_fleet(ward_jobs: Sequence[Sequence[JobSpec]], *,
+                            machines_per_tier: Mapping[str, int] | None
+                            = None,
+                            max_count: int = 5,
+                            max_sweeps: int = 8,
+                            jax_threshold: int | None = None) -> Dict:
+    """Online fleet replanning vs the clairvoyant fixed point
+    (DESIGN.md §9): `online_schedule_fleet`'s committed fleet-true
+    objective over `scheduler.search_fleet`'s — the multi-ward price of
+    not knowing the future, on the same shared metropolitan cloud.
+
+    Both sides are fleet-true (the online commits never double-book the
+    cloud; the clairvoyant plan is scored by `simulate_fleet`), so the
+    ratio is meaningfully >= ~1. Returns {"online", "clairvoyant",
+    "ratio", "sweeps"} — recorded per seed by
+    benchmarks/scheduler_scale.py --online."""
+    online_scheds = online_schedule_fleet(
+        ward_jobs, machines_per_tier=machines_per_tier,
+        max_count=max_count, jax_threshold=jax_threshold)
+    online_total = sum(s.weighted_sum for s in online_scheds)
+    plan = scheduler.search_fleet(
+        ward_jobs, machines_per_tier=machines_per_tier,
+        max_count=max_count * 10, max_sweeps=max_sweeps,
+        jax_threshold=jax_threshold)
+    clair = plan.fleet.weighted_sum
+    return {"online": float(online_total), "clairvoyant": float(clair),
+            "ratio": float(online_total / max(clair, 1e-9)),
+            "sweeps": plan.sweeps}
+
+
 def competitive_ratio_batch(instances: Sequence[Sequence[JobSpec]],
                             replans: Sequence[str] = ("greedy", "tabu"), *,
                             jax_threshold: int | None = None,

@@ -108,25 +108,66 @@ ONLINE_SCENARIOS = {
 }
 
 
-def metro_jobs(rng: np.random.Generator, n: int = 100,
-               horizon: float = 50.0) -> List[JobSpec]:
-    """Cloud-attractive ward workload in the paper's Table VI cost regime
+def metro_costs(rng: np.random.Generator, scale: float = 1.0
+                ) -> tuple[Dict[str, float], Dict[str, float]]:
+    """One (proc, trans) cost row in the paper's Table VI metro regime
     (cloud fast but far, edge moderate, device slow): proc_cloud 2-8,
     trans_cloud 10-40, proc_edge 4-14, trans_edge 1-8, proc_device 20-70.
+
+    ``scale`` shrinks/grows the whole row (metro traces size the three
+    episode stages with it — the life-death threat model is tiny, the
+    phenotype classifier heavy). Draw order is part of the contract:
+    `metro_jobs` consumers (the §9 contention benchmark) depend on
+    bit-identical streams for a given rng state."""
+    proc = {CC: scale * float(rng.integers(2, 9)),
+            ES: scale * float(rng.integers(4, 15)),
+            ED: scale * float(rng.integers(20, 71))}
+    trans = {CC: scale * float(rng.integers(10, 41)),
+             ES: scale * float(rng.integers(1, 9)), ED: 0.0}
+    return proc, trans
+
+
+def metro_jobs(rng: np.random.Generator, n: int = 100,
+               horizon: float = 50.0) -> List[JobSpec]:
+    """Cloud-attractive ward workload in the `metro_costs` regime.
 
     With these magnitudes the shared metropolitan cloud carries real load
     from every ward, which is exactly the regime where per-ward-independent
     planning double-books it — the contention benchmark's generator
     (DESIGN.md §9)."""
-    return [JobSpec(
-        name=f"J{i}", release=float(rng.uniform(0, horizon)),
-        weight=float(rng.integers(1, 4)),
-        proc={CC: float(rng.integers(2, 9)),
-              ES: float(rng.integers(4, 15)),
-              ED: float(rng.integers(20, 71))},
-        trans={CC: float(rng.integers(10, 41)),
-               ES: float(rng.integers(1, 9)), ED: 0.0})
-        for i in range(n)]
+    out = []
+    for i in range(n):
+        release = float(rng.uniform(0, horizon))
+        weight = float(rng.integers(1, 4))
+        proc, trans = metro_costs(rng)
+        out.append(JobSpec(name=f"J{i}", release=release, weight=weight,
+                           proc=proc, trans=trans))
+    return out
+
+
+def patient_jobs(rng: np.random.Generator, patients: int,
+                 horizon: float) -> List:
+    """Random ICU patient jobs: each patient's end device releases one of
+    the paper's three LSTM applications in [0, horizon) at a Table IV data
+    size. THE scenario source for the serving driver and benchmarks
+    (launch/serve.py binds `make_jobs` to this) — returns cost-model
+    `Job`s, not JobSpecs; pair with a CostModel via `jobs_to_specs`."""
+    # local imports: keep core.problems importable without the model zoo
+    from repro.configs.icu_lstm import DATA_SIZES, ICU_WORKLOADS
+    from repro.core.cost_model import Workload
+    from repro.data import icu
+
+    jobs = []
+    for pid in range(patients):
+        wl_cfg = ICU_WORKLOADS[rng.integers(len(ICU_WORKLOADS))]
+        size = int(DATA_SIZES[rng.integers(len(DATA_SIZES))])
+        wl = Workload(name=wl_cfg.name, comp=wl_cfg.paper_flops,
+                      unit_bytes=icu.record_bytes(wl_cfg),
+                      priority=wl_cfg.priority)
+        jobs.append(Job(workload=wl, size=size,
+                        release=float(rng.uniform(0, horizon)),
+                        name=f"patient{pid}-{wl_cfg.name.split('-')[0]}"))
+    return jobs
 
 
 def ward_batch(rng: np.random.Generator, wards: int,

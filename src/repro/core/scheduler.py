@@ -44,6 +44,25 @@ JAX_SEARCH_THRESHOLD = 64
 # search (DESIGN.md §8); smaller ones loop the per-instance `search`
 BATCHED_SEARCH_MIN_WARDS = 4
 
+# (n, cloud machines, edge machines, objective) shapes the jitted solo
+# search has already compiled IN THIS PROCESS. On CPU the delta-evaluated
+# kernel beats the incremental Python path once compiled (DESIGN.md
+# §3.3), but a fresh XLA trace costs seconds — so `search` only
+# dispatches a CPU call to JAX when its shape is in here, i.e. when some
+# earlier call (benchmark warm-up, explicit jax_threshold, TPU run)
+# already paid the compile. Replanning loops with repeating shapes (the
+# metro engine) then ride the compiled kernel for free.
+#
+# Note the trade this makes explicit: the two backends are both exact
+# C1-C5 searches but follow different trajectories (paired moves, §8),
+# so they can return DIFFERENT valid local optima — a cache hit changes
+# which one a later same-shape call gets. `search` results are therefore
+# deterministic per (inputs, dispatch state), not per inputs alone;
+# callers that need call-order-independent output pin the backend with
+# an explicit jax_threshold. The committed benchmarks run each section
+# in a fixed order in a fresh process, so their numbers are stable.
+_COMPILED_SHAPES: set = set()
+
 
 # --------------------------------------------------------------- strategies
 def all_on_tier(jobs: Sequence[JobSpec], tier: str,
@@ -232,10 +251,19 @@ def search(jobs: Sequence[JobSpec],
     (DESIGN.md §9: immovable background jobs, initial required) are
     threaded through whichever backend runs, so both search the problem
     the schedule will actually be committed against.
+
+    Compiled-shape fast path: a CPU call whose (n, fleet, objective)
+    shape some earlier call already compiled (`_COMPILED_SHAPES`)
+    dispatches to JAX even below the threshold — the compile is sunk, and
+    once compiled the jitted search wins on CPU too (DESIGN.md §3.3).
     """
     n = len(jobs)
+    mpt = dict(machines_per_tier or {})
+    mpt_jax = (int(mpt.get(CC, 1)), int(mpt.get(ES, 1)))
+    shape = (n, mpt_jax, objective)
     if jax_threshold is None:
-        use_jax = n > JAX_SEARCH_THRESHOLD and _accelerator_backend()
+        use_jax = (n > JAX_SEARCH_THRESHOLD and _accelerator_backend()) \
+            or shape in _COMPILED_SHAPES
     else:
         use_jax = n > jax_threshold
     if not use_jax:
@@ -249,8 +277,6 @@ def search(jobs: Sequence[JobSpec],
                          "assignment carrying their pinned tiers")
     assign0 = initial or greedy_schedule(
         jobs, machines_per_tier=machines_per_tier, busy_until=busy_until)
-    mpt = dict(machines_per_tier or {})
-    mpt_jax = (int(mpt.get(CC, 1)), int(mpt.get(ES, 1)))
     busy_jax = tuple(machine_free_times(busy_until, t, m)
                      for t, m in zip((CC, ES), mpt_jax))
     _, best_a = scheduler_jax.tabu_search_jax(
@@ -258,6 +284,7 @@ def search(jobs: Sequence[JobSpec],
         max_rounds=max(max_count, 1) * len(jobs), objective=objective,
         machines_per_tier=mpt_jax, busy_until=busy_jax,
         frozen=None if frozen is None else list(frozen))
+    _COMPILED_SHAPES.add(shape)
     return simulate(jobs, [MACHINES[int(m)] for m in best_a],
                     machines_per_tier=machines_per_tier,
                     busy_until=busy_until)
@@ -269,7 +296,10 @@ def search_batched(problems: Sequence[Sequence[JobSpec]],
                    machines_per_tier=None,
                    busy_until=None,
                    min_batch: int | None = None,
-                   jax_threshold: int | None = None) -> List[Schedule]:
+                   jax_threshold: int | None = None,
+                   initial: Sequence[Sequence[str]] | None = None,
+                   frozen: Sequence[Sequence[bool] | None] | None = None
+                   ) -> List[Schedule]:
     """Plan B independent ward instances, one jitted device call
     (DESIGN.md §8) — the fleet-scale entry point used by
     `launch/serve.py --wards` and the batched clairvoyant baselines in
@@ -287,6 +317,12 @@ def search_batched(problems: Sequence[Sequence[JobSpec]],
     fallback's per-instance `search` calls, so small batches dispatch to
     the same backend their caller asked large ones to use (§3.3).
 
+    initial / frozen (DESIGN.md §9): optional per-ward warm-start tier
+    lists and immovable-background masks, forwarded to whichever backend
+    runs (frozen jobs require initial, as everywhere else). The metro
+    engine's multi-ward replans ride through here so one event's replans
+    batch into one device call (DESIGN.md §10).
+
     Every returned Schedule is a final exact `simulate` of its ward's
     best assignment against that ward's own fleet, so reported numbers
     are the reference evaluator's bit-for-bit (§3.1 invariant)."""
@@ -295,16 +331,32 @@ def search_batched(problems: Sequence[Sequence[JobSpec]],
         is None
     mpts = [machines_per_tier] * B if single else list(machines_per_tier)
     busys = [None] * B if busy_until is None else list(busy_until)
-    if len(mpts) != B or len(busys) != B:
+    inits = [None] * B if initial is None else list(initial)
+    frozens = [None] * B if frozen is None else list(frozen)
+    if len(mpts) != B or len(busys) != B or len(inits) != B \
+            or len(frozens) != B:
         raise ValueError(f"{len(mpts)} fleets / {len(busys)} busy vectors "
-                         f"for {B} wards")
+                         f"/ {len(inits)} initials / {len(frozens)} frozen "
+                         f"masks for {B} wards")
     threshold = BATCHED_SEARCH_MIN_WARDS if min_batch is None else min_batch
     if B < threshold:
         return [search(jobs, max_count=max_count, objective=objective,
-                       jax_threshold=jax_threshold,
-                       machines_per_tier=m, busy_until=b)
-                for jobs, m, b in zip(problems, mpts, busys)]
+                       jax_threshold=jax_threshold, initial=init,
+                       frozen=fr, machines_per_tier=m, busy_until=b)
+                for jobs, m, b, init, fr
+                in zip(problems, mpts, busys, inits, frozens)]
     from repro.core import scheduler_jax   # lazy: keep jax off small paths
+    if initial is None and frozen is not None \
+            and any(fr is not None and any(fr) for fr in frozens):
+        raise ValueError("frozen jobs require an explicit initial "
+                         "assignment carrying their pinned tiers")
+    if initial is not None:
+        # the batched backend needs an initial for every ward or none —
+        # fill the gaps with the greedy initial the solo path would use,
+        # so mixed-initial calls behave the same on both dispatch paths
+        inits = [init if init is not None else greedy_schedule(
+            jobs, machines_per_tier=m, busy_until=b)
+            for jobs, m, b, init in zip(problems, mpts, busys, inits)]
     pairs = [(int(dict(m or {}).get(CC, 1)), int(dict(m or {}).get(ES, 1)))
              for m in mpts]
     busy_pairs = [tuple(machine_free_times(b, t, mm)
@@ -312,9 +364,13 @@ def search_batched(problems: Sequence[Sequence[JobSpec]],
                   for b, pair in zip(busys, pairs)]
     n_max = max((len(jobs) for jobs in problems), default=0)
     _, assigns = scheduler_jax.tabu_search_batched(
-        problems, max_rounds=max(max_count, 1) * max(n_max, 1),
+        problems,
+        None if initial is None else
+        [[MACHINES.index(t) for t in init] for init in inits],
+        max_rounds=max(max_count, 1) * max(n_max, 1),
         objective=objective, machines_per_tier=pairs,
-        busy_until=busy_pairs)
+        busy_until=busy_pairs,
+        frozen=None if frozen is None else frozens)
     return [simulate(jobs, [MACHINES[int(i)] for i in a],
                      machines_per_tier=m, busy_until=b)
             for jobs, a, m, b in zip(problems, assigns, mpts, busys)]

@@ -39,6 +39,9 @@ class JobSpec:
     trans: Mapping[str, float]       # tier -> D_i (device: 0)
     workload: str = ""               # originating workload (serving maps
                                      # schedule entries back to engines)
+    deadline: float = float("inf")   # SLA budget on response = end - release
+                                     # (relative, not absolute; metro traffic
+                                     # scores miss-rate against it)
 
     def response_if_alone(self, tier: str) -> float:
         return self.proc[tier] + self.trans[tier]

@@ -14,6 +14,9 @@ four baseline strategies.
   python -m repro.launch.serve --wards 16           # multi-hospital fleet:
                                                     # one batched device call
                                                     # plans every ward
+  python -m repro.launch.serve --metro              # streaming metro load:
+                                                    # hours of episodes vs
+                                                    # failures, policy table
 """
 from __future__ import annotations
 
@@ -24,11 +27,11 @@ import zlib
 import jax
 import numpy as np
 
-from repro.configs.icu_lstm import DATA_SIZES, ICU_WORKLOADS
+from repro.configs.icu_lstm import ICU_WORKLOADS
 from repro.core import scheduler
-from repro.core.cost_model import CalibratedCostModel, Job, Workload
+from repro.core.cost_model import CalibratedCostModel
 from repro.core.lower_bound import paper_lower_bound
-from repro.core.problems import jobs_to_specs
+from repro.core.problems import jobs_to_specs, patient_jobs
 from repro.core.tiers import CC, ED, ES, paper_tiers, tpu_tiers
 from repro.data import icu
 from repro.models.lstm import ICULSTM
@@ -55,19 +58,10 @@ def calibrate(tiers, engines, unit_records: int = 16):
     return CalibratedCostModel(tiers, unit_proc, unit_trans)
 
 
-def make_jobs(rng, patients: int, horizon: float):
-    """Each patient's end device releases one random ICU job in [0, horizon)."""
-    jobs = []
-    for pid in range(patients):
-        wl_cfg = ICU_WORKLOADS[rng.integers(len(ICU_WORKLOADS))]
-        size = int(DATA_SIZES[rng.integers(len(DATA_SIZES))])
-        wl = Workload(name=wl_cfg.name, comp=wl_cfg.paper_flops,
-                      unit_bytes=icu.record_bytes(wl_cfg),
-                      priority=wl_cfg.priority)
-        jobs.append(Job(workload=wl, size=size,
-                        release=float(rng.uniform(0, horizon)),
-                        name=f"patient{pid}-{wl_cfg.name.split('-')[0]}"))
-    return jobs
+# Each patient's end device releases one random ICU job in [0, horizon).
+# The generator lives in core.problems so serve and benchmarks draw from
+# ONE scenario library; the old name stays bound for callers/tests.
+make_jobs = patient_jobs
 
 
 def _setup_fleet(tiers_kind, cloud_machines, edge_machines):
@@ -249,6 +243,74 @@ def run_wards(wards=4, patients=10, horizon=30.0, seed=0,
     return schedules, seconds
 
 
+def run_metro(wards=4, hours=2.0, seed=0, cloud_machines=2,
+              edge_machines=2, policies=("greedy", "tabu", "fleet"),
+              verbose=True, jax_threshold=None):
+    """Metro traffic mode (DESIGN.md §10): hours of streaming
+    patient-episode traffic over `wards` wards sharing one metropolitan
+    cloud, replayed under each policy on identical traces, failures and
+    elastic-capacity events. Prints the policy comparison (p50/p99
+    response, SLA deadline miss-rate overall and per workload class,
+    per-tier utilisation, engine events/s) and returns
+    {policy: summary dict}.
+
+    One trace time unit reads as one minute; episodes are the paper's
+    three-app cascade with per-class response deadlines
+    (metro.traces.EPISODE_STAGES). Unlike the finite single-shot modes
+    above, nothing here is scored once — schedules are committed event
+    by event against machine failures and scale events, which is the
+    regime the ROADMAP's sustained-load north star asks for."""
+    from repro.metro import make_policy, simulate_metro, traces
+
+    horizon = hours * 60.0
+    tr, fails, scales = traces.default_scenario(seed, wards, horizon)
+    mpt = {CC: cloud_machines, ES: edge_machines}
+    # fleet's joint fixed point gets small per-event budgets: each event
+    # only needs local repair on top of the previous one (DESIGN.md §10).
+    # jax_threshold pins the search backend of the replanning policies
+    # (greedy never searches) — pass it for call-order-independent runs
+    # (see metro.engine's determinism note).
+    kwargs = {"fleet": dict(max_count=2, max_sweeps=1,
+                            jax_threshold=jax_threshold),
+              "tabu": dict(jax_threshold=jax_threshold)}
+    if verbose:
+        n_jobs = sum(len(t) for t in tr)
+        print(f"metro: {wards} wards x {hours:.1f}h, {n_jobs} episode-stage "
+              f"jobs, {len(fails)} cloud failures, {len(scales)} scale "
+              f"events, fleet {cloud_machines}c/{edge_machines}e per ward")
+        print(f"{'policy':8s} {'p50':>6s} {'p95':>6s} {'p99':>6s} "
+              f"{'miss%':>6s} {'threat%':>8s} {'cloud':>6s} {'edge':>6s} "
+              f"{'events/s':>9s}")
+    out = {}
+    for name in policies:
+        res = simulate_metro(tr, make_policy(name, **kwargs.get(name, {})),
+                             machines_per_tier=mpt, failures=fails,
+                             scale_events=scales)
+        s = res.summary()
+        out[name] = s
+        if verbose:
+            util = s["utilization"]
+            threat = s["miss_by_class"].get("life-death-prediction", 0.0)
+            print(f"{name:8s} {s['p50']:6.1f} {s['p95']:6.1f} "
+                  f"{s['p99']:6.1f} {s['miss_rate']:6.2%} {threat:8.2%} "
+                  f"{util.get('cloud', 0.0):6.1%} "
+                  f"{util.get('edge', 0.0):6.1%} "
+                  f"{s['events_per_s']:9.0f}")
+    if verbose and "greedy" in out and "tabu" in out:
+        # same semantics as benchmarks.scheduler_scale.bench_metro: the
+        # ratio is vacuous when greedy itself misses nothing, and a
+        # perfect tabu run is floored at half a missed job
+        g, t = out["greedy"]["miss_rate"], out["tabu"]["miss_rate"]
+        if g == 0:
+            print("tabu-replan miss-rate improvement vs greedy: vacuous "
+                  "(greedy missed no deadlines)")
+        else:
+            jobs_done = max(out["greedy"]["completions"], 1)
+            print(f"tabu-replan miss-rate improvement vs greedy: "
+                  f"{g / max(t, 0.5 / jobs_done):.2f}x")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--patients", type=int, default=10)
@@ -273,10 +335,25 @@ def main():
                          "contention-aware fixed-point search; reports "
                          "naive vs fleet-true scores and the gap "
                          "(DESIGN.md §9)")
+    ap.add_argument("--metro", action="store_true",
+                    help="streaming metro traffic mode: hours of "
+                         "patient-episode load over a shared-cloud ward "
+                         "fleet with failures and elastic capacity, "
+                         "compared across replanning policies "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--metro-hours", type=float, default=2.0,
+                    help="simulated hours of metro traffic (>= 2 for the "
+                         "full policy comparison)")
     args = ap.parse_args()
     if args.contention and args.wards <= 0:
         ap.error("--contention requires --wards N (N > 0)")
-    if args.wards > 0:
+    if args.metro:
+        run_metro(wards=args.wards or 4, hours=args.metro_hours,
+                  seed=args.seed,
+                  cloud_machines=args.cloud_machines or 2,
+                  edge_machines=args.edge_machines or 2,
+                  jax_threshold=args.jax_threshold)
+    elif args.wards > 0:
         run_wards(wards=args.wards, patients=args.patients,
                   horizon=args.horizon, seed=args.seed,
                   tiers_kind=args.tiers,

@@ -1,0 +1,30 @@
+"""Metro traffic engine (DESIGN.md §10): streaming patient-episode
+simulation for metro-scale emergency load.
+
+Three layers over the core scheduling machinery:
+
+  * `traces`   — patient-episode generators (correlated bursts of the
+    paper's three ICU apps) with diurnal/surge-modulated Poisson
+    intensity per ward, per-workload-class SLA deadlines, and machine
+    failure / elastic-capacity event streams;
+  * `engine`   — a discrete-event loop over arrivals, completions,
+    failures/recoveries and scale events, maintaining the true fleet
+    occupancy (shared metropolitan cloud pool, per-ward edge pools,
+    private devices) and driving a pluggable `Policy`;
+  * `policies` — greedy commit-on-arrival, tabu committed replanning
+    (`online_schedule`-style, batched across wards at matching event
+    counts via `scheduler.search_batched`), and the contention-aware
+    fleet fixed point (`scheduler.search_fleet`);
+  * `metrics`  — streaming, windowed SLA metrics: p50/p95/p99 response,
+    deadline miss-rate per workload class, per-tier utilisation, all
+    O(1) memory over unbounded runs.
+"""
+from repro.metro.engine import (FailureEvent, MetroEngine, MetroResult,
+                                ScaleEvent, simulate_metro)
+from repro.metro.metrics import MetroMetrics
+from repro.metro.policies import (FleetPolicy, GreedyPolicy, Policy,
+                                  TabuPolicy, make_policy)
+
+__all__ = ["FailureEvent", "MetroEngine", "MetroResult", "ScaleEvent",
+           "simulate_metro", "MetroMetrics", "FleetPolicy", "GreedyPolicy",
+           "Policy", "TabuPolicy", "make_policy"]

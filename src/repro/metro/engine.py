@@ -1,0 +1,508 @@
+"""Discrete-event metro traffic engine (DESIGN.md §10).
+
+Event loop over job arrivals, completions, machine failures/recoveries
+and elastic scale events for B hospital wards sharing one metropolitan
+cloud pool (per-ward edge pools, private devices — the §9 fleet model,
+now under streaming load instead of a finite scored-once job list).
+
+Ground truth lives HERE, not in the policy: machines are explicit slots
+with identity (so a failure can strike a specific machine and elastic
+scale-down can retire one), and after every decision the engine replays
+each pool's unstarted commitments through the same FIFO-by-arrival
+dispatch `simulate` defines (C1–C5). Policies only pick tiers; the
+replay prices their choices on the real fleet — a ward-local plan that
+double-books the shared cloud gets delayed by the merged queue, exactly
+as in `simulate_fleet`.
+
+Commitment semantics follow `online_schedule` (DESIGN.md §7): a job
+whose machine slot has begun (start <= now) is immutable (C2); every
+other commitment may be re-tiered by the policy and is re-timed by the
+replay. A machine failure therefore never drops a running job — the
+machine finishes it, then goes down for the repair duration, delaying
+its queue successors; with B = 1 wards, no failures and the tabu policy,
+the engine's event sequence IS `online_schedule(replan="tabu")` and the
+committed schedules match bit-for-bit (tests/test_metro.py).
+
+Completion events are scheduled from commitment end times and validated
+lazily on pop (a replan that re-times a commitment simply strands the
+stale event), the standard DES invalidation scheme — so the event log is
+a deterministic function of (traces, fleet events, policy) and of the
+`scheduler.search` dispatch state: search-based policies inherit the
+§3.3 compiled-shape cache, so a process that force-compiled a shape
+before the run may legitimately commit a different (equally exact)
+local optimum than a fresh process. Pin `jax_threshold` on the policy
+for call-order-independent runs; the committed benchmarks run in a
+fresh process with a fixed section order.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import online
+from repro.core.simulator import JobSpec, Schedule, ScheduledJob
+from repro.core.tiers import CC, ED, ES
+from repro.metro.metrics import MetroMetrics
+from repro.metro.policies import Policy, ReplanRequest
+
+_INF = float("inf")
+# same-instant ordering: completions first (a machine freeing at t is
+# visible to a replan at t), then fleet events, then arrivals
+_P_COMPLETE, _P_FAIL, _P_SCALE, _P_RECOVER, _P_ARRIVE = 0, 1, 2, 3, 4
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    """A machine in `tier`'s pool (ward-local for edge, fleet-wide for
+    cloud) breaks at `time` for `duration`: the earliest-free machine is
+    struck, finishes any running job, then stays down until repaired."""
+    time: float
+    tier: str = CC
+    ward: Optional[int] = None           # None = the shared cloud pool
+    duration: float = 10.0
+
+
+@dataclass(frozen=True)
+class ScaleEvent:
+    """Elastic capacity: delta > 0 adds machines to the pool at `time`;
+    delta < 0 retires the earliest-free ones (each finishes its running
+    job, then leaves the pool for good)."""
+    time: float
+    tier: str = CC
+    ward: Optional[int] = None
+    delta: int = 1
+
+
+@dataclass
+class _Commit:
+    """One job's current commitment. Attribute names match
+    `online._Commit` so `online._replan_spec` builds the replan view."""
+    job: JobSpec
+    machine: str
+    arrival: float
+    start: float
+    end: float
+    slot: int = -1
+    planned_at: float = 0.0
+
+
+class _Slot:
+    """One machine with identity: when it joined the pool, until when it
+    is down (inf = retired), and its recorded outage intervals (exact
+    utilisation accounting)."""
+    __slots__ = ("created", "down", "outages", "retired_at")
+
+    def __init__(self, created: float = 0.0):
+        self.created = created
+        self.down = created          # not dispatchable before it exists
+        self.outages: List[Tuple[float, float]] = []
+        self.retired_at: Optional[float] = None
+
+
+class _Pool:
+    def __init__(self, tier: str, machines: int):
+        if machines < 1:
+            raise ValueError(f"{tier} pool needs >= 1 machine")
+        self.tier = tier
+        self.slots = [_Slot() for _ in range(machines)]
+        # per-machine free times with every queued commitment dispatched —
+        # the greedy policy's reserved view; refreshed by each replay
+        self.reserved: List[float] = [0.0] * machines
+
+    def capacity_integral(self, t_end: float) -> float:
+        """Machine-seconds the pool could have run in [0, t_end]."""
+        total = 0.0
+        for s in self.slots:
+            hi = min(s.retired_at if s.retired_at is not None else t_end,
+                     t_end)
+            span = max(0.0, hi - s.created)
+            for d0, d1 in s.outages:
+                span -= max(0.0, min(d1, hi) - max(d0, s.created))
+            total += max(0.0, span)
+        return total
+
+
+@dataclass
+class MetroResult:
+    """One policy's run: verbatim committed schedules per ward, streaming
+    metrics, exact per-tier utilisation, the deterministic event log, and
+    the wall-clock throughput of the run."""
+    policy: str
+    wards: List[Schedule]
+    metrics: MetroMetrics
+    utilization: Dict[str, float]
+    event_log: List[tuple]
+    events: int
+    seconds: float
+
+    @property
+    def events_per_s(self) -> float:
+        return self.events / self.seconds if self.seconds > 0 else 0.0
+
+    def summary(self) -> dict:
+        out = self.metrics.summary(self.utilization)
+        out.update(policy=self.policy, events=self.events,
+                   seconds=self.seconds, events_per_s=self.events_per_s)
+        return out
+
+
+class MetroEngine:
+    """See module docstring. One engine instance runs one policy over one
+    set of ward traces; `run()` may be called once."""
+
+    def __init__(self, ward_traces: Sequence[Sequence[JobSpec]],
+                 policy: Policy, *,
+                 machines_per_tier: Mapping[str, int] | None = None,
+                 failures: Sequence[FailureEvent] = (),
+                 scale_events: Sequence[ScaleEvent] = (),
+                 metrics: MetroMetrics | None = None):
+        mpt = dict(machines_per_tier or {CC: 1, ES: 1})
+        self.jobs: List[List[JobSpec]] = [list(t) for t in ward_traces]
+        self.B = len(self.jobs)
+        if self.B == 0:
+            raise ValueError("metro engine needs at least one ward")
+        self.policy = policy
+        self.cloud = _Pool(CC, mpt.get(CC, 1))
+        self.edges = [_Pool(ES, mpt.get(ES, 1)) for _ in range(self.B)]
+        self.commits: List[List[Optional[_Commit]]] = [
+            [None] * len(t) for t in self.jobs]
+        self.finished: List[List[bool]] = [
+            [False] * len(t) for t in self.jobs]
+        self.pending: List[List[int]] = [[] for _ in range(self.B)]
+        self.metrics = metrics or MetroMetrics()
+        self.event_log: List[tuple] = []
+        self._heap: List[tuple] = []
+        self._seq = 0
+        self._events = 0
+        self._t_end = 0.0
+        self._ran = False
+        for b, trace in enumerate(self.jobs):
+            for i, job in enumerate(trace):
+                self._push(job.release, _P_ARRIVE, ("arrive", b, i))
+        for ev in failures:
+            self._pool(ev.tier, ev.ward)      # validate tier/ward early
+            self._push(ev.time, _P_FAIL, ("fail", ev))
+        for ev in scale_events:
+            self._pool(ev.tier, ev.ward)
+            self._push(ev.time, _P_SCALE, ("scale", ev))
+
+    # ------------------------------------------------------------ plumbing
+    def _push(self, t: float, prio: int, payload: tuple) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, prio, self._seq, payload))
+
+    def _pool(self, tier: str, ward: Optional[int]) -> _Pool:
+        if tier == CC:
+            if ward is not None:
+                raise ValueError("the cloud pool is shared: ward must be "
+                                 "None for cloud fleet events")
+            return self.cloud
+        if tier == ES:
+            if ward is None or not 0 <= ward < self.B:
+                raise ValueError(f"edge fleet events need a ward in "
+                                 f"[0, {self.B}), got {ward}")
+            return self.edges[ward]
+        raise ValueError(f"no machine pool on tier {tier!r}")
+
+    def _pool_members(self, pool: _Pool) -> List[Tuple[int, int]]:
+        if pool.tier == CC:
+            wards: Sequence[int] = range(self.B)
+        else:
+            wards = [self.edges.index(pool)]
+        return [(b, i) for b in wards
+                for i, c in enumerate(self.commits[b])
+                if c is not None and c.machine == pool.tier]
+
+    def _slot_frees(self, pool: _Pool, now: float) -> List[float]:
+        """Per-slot next-free times from STARTED commitments + outages —
+        what a replan at `now` may not dispatch before."""
+        free = [max(s.down, 0.0) for s in pool.slots]
+        for b, i in self._pool_members(pool):
+            c = self.commits[b][i]
+            if c.start <= now and c.end > free[c.slot]:
+                free[c.slot] = c.end
+        return free
+
+    def _busy_view(self, pool: _Pool, now: float) -> List[float]:
+        """`busy_until` entries for the search policies: occupied-machine
+        free times strictly beyond `now` (idle machines are implicit,
+        matching `online._busy_vectors` / `machine_free_times`)."""
+        return [f for f in self._slot_frees(pool, now) if f > now]
+
+    # ------------------------------------------------------------- replay
+    def _replay_pool(self, pool: _Pool, now: float) -> None:
+        """Re-dispatch every unstarted commitment of one pool FIFO by
+        (arrival, plan time, ward, index) over the slot free times —
+        `simulate`'s C5 semantics with machine identity. Started jobs are
+        untouched (C2); re-timed jobs get fresh completion events."""
+        free = self._slot_frees(pool, now)
+        queue = []
+        for b, i in self._pool_members(pool):
+            c = self.commits[b][i]
+            if c.start > now:
+                queue.append((max(now, c.arrival), c.planned_at, b, i))
+        queue.sort()
+        heap = list(zip(free, range(len(free))))
+        heapq.heapify(heap)
+        for arr, _, b, i in queue:
+            c = self.commits[b][i]
+            avail, k = heapq.heappop(heap)
+            start = arr if arr > avail else avail
+            end = start + c.job.proc[pool.tier]
+            if end == _INF:                          # pragma: no cover
+                raise ValueError(f"{pool.tier} pool has no dispatchable "
+                                 f"machine for {c.job.name}")
+            heapq.heappush(heap, (end, k))
+            if (start, end, k) != (c.start, c.end, c.slot):
+                c.start, c.end, c.slot = start, end, k
+                self._push(end, _P_COMPLETE, ("complete", b, i, end))
+        pool.reserved = sorted(f for f, _ in heap)
+
+    def _replay(self, now: float, edge_wards: Sequence[int] | None = None,
+                cloud: bool = True) -> None:
+        """Replay the pools an event could have touched: the shared cloud
+        (any decision can move jobs on/off it) plus the edge pools of the
+        decided/affected wards — never the B-1 untouched edge pools."""
+        if cloud:
+            self._replay_pool(self.cloud, now)
+        for b in (range(self.B) if edge_wards is None else edge_wards):
+            self._replay_pool(self.edges[b], now)
+
+    # ------------------------------------------------------------ replans
+    def _decide(self, wards: Sequence[int], now: float,
+                fresh: Mapping[int, Sequence[int]] = ()) -> None:
+        fresh = dict(fresh or {})
+        cloud_busy = self._busy_view(self.cloud, now)
+        # every ward's unstarted cloud commitments, shifted to `now`:
+        # ward b's replan sees the other wards' entries as frozen
+        # background (queue-active, immovable — DESIGN.md §9)
+        cloud_queue: List[Tuple[int, JobSpec]] = []
+        for c in range(self.B):
+            for j, cm in enumerate(self.commits[c]):
+                if cm is not None and cm.machine == CC and cm.start > now:
+                    cloud_queue.append(
+                        (c, online._replan_spec(self.jobs[c][j], cm, now)))
+        requests: List[ReplanRequest] = []
+        for b in wards:
+            movable = [i for i in self.pending[b]
+                       if self.commits[b][i] is None
+                       or self.commits[b][i].start > now]
+            self.pending[b] = movable
+            if not movable:
+                continue
+            shifted = [online._replan_spec(self.jobs[b][i],
+                                           self.commits[b][i], now)
+                       for i in movable]
+            new = set(fresh.get(b, ()))
+            requests.append(ReplanRequest(
+                ward=b, movable=movable, shifted=shifted,
+                current=[None if self.commits[b][i] is None
+                         else self.commits[b][i].machine for i in movable],
+                fresh=[p for p, i in enumerate(movable) if i in new],
+                busy={CC: list(cloud_busy),
+                      ES: self._busy_view(self.edges[b], now)},
+                reserved={CC: list(self.cloud.reserved),
+                          ES: list(self.edges[b].reserved)},
+                machines_per_tier={CC: len(self.cloud.slots),
+                                   ES: len(self.edges[b].slots)},
+                background=[spec for c, spec in cloud_queue if c != b]))
+        if requests:
+            decisions = self.policy.decide(requests, now)
+            if len(decisions) != len(requests):
+                raise ValueError(f"policy returned {len(decisions)} plans "
+                                 f"for {len(requests)} wards")
+            for req, tiers in zip(requests, decisions):
+                if len(tiers) != len(req.movable):
+                    raise ValueError(
+                        f"ward {req.ward}: {len(tiers)} tiers for "
+                        f"{len(req.movable)} movable jobs")
+                for pos, i in enumerate(req.movable):
+                    self._commit(req.ward, i, req.shifted[pos],
+                                 tiers[pos], now)
+        self._replay(now, edge_wards=[req.ward for req in requests])
+
+    def _commit(self, b: int, i: int, shifted: JobSpec, tier: str,
+                now: float) -> None:
+        job = self.jobs[b][i]
+        arrival = now + shifted.trans.get(tier, 0.0)
+        if tier == ED:
+            # private device: no queue, times final at commitment (C4)
+            end = arrival + job.proc[ED]
+            old = self.commits[b][i]
+            if old is None or (old.machine, old.end) != (ED, end):
+                self._push(end, _P_COMPLETE, ("complete", b, i, end))
+            self.commits[b][i] = _Commit(job, ED, arrival, arrival, end,
+                                         slot=-1, planned_at=now)
+            return
+        if tier not in (CC, ES):
+            raise ValueError(f"policy placed a job on unknown tier "
+                             f"{tier!r}")
+        # shared tiers: the replay assigns slot and times (start > now
+        # placeholder keeps it in the unstarted set)
+        self.commits[b][i] = _Commit(job, tier, arrival, _INF, _INF,
+                                     slot=-1, planned_at=now)
+
+    # ------------------------------------------------------------- events
+    def _on_arrive(self, now: float, b: int, i: int) -> None:
+        self.pending[b].append(i)
+        self.event_log.append(("arrive", now, b, i, self.jobs[b][i].name))
+        wards = range(self.B) if self.policy.joint else [b]
+        self._decide(wards, now, fresh={b: [i]})
+
+    def _on_complete(self, now: float, b: int, i: int, end: float) -> None:
+        c = self.commits[b][i]
+        if c is None or self.finished[b][i] or c.end != end or \
+                c.start > now:
+            return                                   # stale (re-timed) event
+        self.finished[b][i] = True
+        job = c.job
+        response = end - job.release
+        self.metrics.record(now, job.workload, response, job.deadline,
+                            c.machine, end - c.start)
+        self.event_log.append(
+            ("complete", now, b, i, c.machine, c.start, end, response,
+             int(response > job.deadline)))
+
+    def _strike(self, pool: _Pool, now: float) -> Optional[int]:
+        """Earliest-free non-retired machine (the one a failure or a
+        scale-down takes), or None when the pool has none left."""
+        cand = [(f, k) for k, (f, s) in enumerate(
+            zip(self._slot_frees(pool, now), pool.slots))
+            if s.retired_at is None]
+        return min(cand)[1] if cand else None
+
+    def _on_fail(self, now: float, ev: FailureEvent) -> None:
+        pool = self._pool(ev.tier, ev.ward)
+        k = self._strike(pool, now)
+        ward_key = -1 if ev.ward is None else ev.ward
+        if k is None:                      # every machine already retired
+            self.event_log.append(("fail", now, ev.tier, ward_key, -1,
+                                   now))
+            return
+        slot = pool.slots[k]
+        base = max(self._slot_frees(pool, now)[k], now)
+        down_until = base + ev.duration
+        slot.down = max(slot.down, down_until)
+        slot.outages.append((base, down_until))
+        self.event_log.append(("fail", now, ev.tier, ward_key, k,
+                               down_until))
+        self._push(down_until, _P_RECOVER, ("recover", ev.tier, ev.ward))
+        self._after_fleet_event(ev.tier, ev.ward, now)
+
+    def _on_recover(self, now: float, tier: str,
+                    ward: Optional[int]) -> None:
+        self.event_log.append(("recover", now, tier,
+                               -1 if ward is None else ward))
+        self._after_fleet_event(tier, ward, now)
+
+    def _on_scale(self, now: float, ev: ScaleEvent) -> None:
+        pool = self._pool(ev.tier, ev.ward)
+        if ev.delta == 0:
+            raise ValueError("scale event with delta 0")
+        if ev.delta > 0:
+            for _ in range(ev.delta):
+                pool.slots.append(_Slot(created=now))
+        else:
+            active = sum(1 for s in pool.slots if s.retired_at is None)
+            if active + ev.delta < 1:
+                raise ValueError(f"scale-down to {active + ev.delta} "
+                                 f"machines on {ev.tier} at t={now}; a "
+                                 f"pool keeps >= 1")
+            for _ in range(-ev.delta):
+                k = self._strike(pool, now)
+                slot = pool.slots[k]
+                slot.retired_at = max(self._slot_frees(pool, now)[k], now)
+                slot.down = _INF
+        self.event_log.append(("scale", now, ev.tier,
+                               -1 if ev.ward is None else ev.ward,
+                               ev.delta))
+        self._after_fleet_event(ev.tier, ev.ward, now)
+
+    def _after_fleet_event(self, tier: str, ward: Optional[int],
+                           now: float) -> None:
+        """Capacity changed: replanning policies revisit every affected
+        ward (all of them for the shared cloud — the matching-event-count
+        batched replan); commit-and-hold policies just re-time."""
+        affected = list(range(self.B)) if tier == CC or self.policy.joint \
+            else [ward]
+        if self.policy.replans_on_fleet_events:
+            self._decide(affected, now)
+        elif tier == CC:
+            self._replay(now, edge_wards=())
+        else:
+            self._replay(now, edge_wards=[ward], cloud=False)
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> MetroResult:
+        if self._ran:
+            raise ValueError("a MetroEngine instance runs once; build a "
+                             "fresh one per policy")
+        self._ran = True
+        t0 = time.perf_counter()
+        while self._heap:
+            t, prio, _, payload = heapq.heappop(self._heap)
+            self._t_end = max(self._t_end, t)
+            self._events += 1
+            kind = payload[0]
+            if kind == "complete":
+                self._on_complete(t, *payload[1:])
+            elif kind == "arrive":
+                self._on_arrive(t, *payload[1:])
+            elif kind == "fail":
+                self._on_fail(t, payload[1])
+            elif kind == "scale":
+                self._on_scale(t, payload[1])
+            else:
+                self._on_recover(t, *payload[1:])
+        seconds = time.perf_counter() - t0
+
+        for b, flags in enumerate(self.finished):
+            missing = [i for i, ok in enumerate(flags) if not ok]
+            if missing:
+                raise ValueError(f"ward {b}: jobs never completed: "
+                                 f"{missing[:5]} (event bug)")
+        wards = []
+        for b in range(self.B):
+            entries = [ScheduledJob(c.job, c.machine, c.arrival, c.start,
+                                    c.end) for c in self.commits[b]]
+            wards.append(Schedule(
+                entries=entries,
+                weighted_sum=sum(e.job.weight * e.response
+                                 for e in entries),
+                unweighted_sum=sum(e.response for e in entries),
+                last_end=max((e.end for e in entries), default=0.0)))
+        return MetroResult(policy=getattr(self.policy, "name", "?"),
+                           wards=wards, metrics=self.metrics,
+                           utilization=self._utilization(),
+                           event_log=self.event_log, events=self._events,
+                           seconds=seconds)
+
+    def _utilization(self) -> Dict[str, float]:
+        t_end = self._t_end
+        busy = self.metrics.busy_time
+        cloud_cap = self.cloud.capacity_integral(t_end)
+        edge_cap = sum(p.capacity_integral(t_end) for p in self.edges)
+        out = {}
+        if cloud_cap > 0:
+            out["cloud"] = busy.get(CC, 0.0) / cloud_cap
+        if edge_cap > 0:
+            out["edge"] = busy.get(ES, 0.0) / edge_cap
+        if t_end > 0:
+            # devices are private/unbounded: report mean concurrency
+            out["device_concurrency"] = busy.get(ED, 0.0) / t_end
+        return out
+
+
+def simulate_metro(ward_traces: Sequence[Sequence[JobSpec]],
+                   policy: Policy, *,
+                   machines_per_tier: Mapping[str, int] | None = None,
+                   failures: Sequence[FailureEvent] = (),
+                   scale_events: Sequence[ScaleEvent] = (),
+                   metrics: MetroMetrics | None = None) -> MetroResult:
+    """Build-and-run convenience wrapper (one engine per policy run)."""
+    return MetroEngine(ward_traces, policy,
+                       machines_per_tier=machines_per_tier,
+                       failures=failures, scale_events=scale_events,
+                       metrics=metrics).run()

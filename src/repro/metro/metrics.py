@@ -1,0 +1,189 @@
+"""Streaming SLA metrics for metro traffic runs (DESIGN.md §10).
+
+Everything here is O(1) memory in the number of completions: response
+times land in fixed log-spaced histograms (quantiles are read back by
+bucket interpolation, so a p99 is accurate to one bucket width — ~5%
+relative with the default 256 buckets over [0.01, 1e5]), per-class
+deadline misses are counters, and "recent" statistics come from a ring
+of per-window histograms that folds closed windows into the totals.
+Long runs therefore hold `bins + windows * bins` integers regardless of
+how many episodes stream through.
+
+All state is plain ints/floats updated in event order, so two runs of
+the same seeded engine produce bit-identical summaries (the metro
+determinism invariant, tests/test_metro.py).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Deque, Dict, List
+
+_UNCLASSED = "unclassified"
+
+
+class StreamingQuantiles:
+    """Fixed log-bucket histogram with quantile read-back.
+
+    add() is O(1); quantile(q) interpolates inside the bucket holding the
+    q-th observation. Values below `lo` land in bucket 0, values above
+    `hi` in the overflow bucket (whose upper edge is the running max, so
+    a pathological tail still reports a finite p99)."""
+
+    def __init__(self, lo: float = 1e-2, hi: float = 1e5, bins: int = 256):
+        if not (lo > 0 and hi > lo and bins > 1):
+            raise ValueError(f"bad histogram shape lo={lo} hi={hi} "
+                             f"bins={bins}")
+        self.lo, self.hi, self.bins = lo, hi, bins
+        self._scale = bins / math.log(hi / lo)
+        self.counts = [0] * (bins + 1)          # +1: overflow bucket
+        self.n = 0
+        self.max = 0.0
+        self.sum = 0.0
+
+    def _bucket(self, x: float) -> int:
+        if x <= self.lo:
+            return 0
+        if x >= self.hi:
+            return self.bins
+        return min(self.bins - 1,
+                   int(math.log(x / self.lo) * self._scale))
+
+    def _edges(self, b: int) -> tuple:
+        if b >= self.bins:
+            return self.hi, max(self.max, self.hi)
+        return (self.lo * math.exp(b / self._scale),
+                self.lo * math.exp((b + 1) / self._scale))
+
+    def add(self, x: float) -> None:
+        self.counts[self._bucket(x)] += 1
+        self.n += 1
+        self.sum += x
+        if x > self.max:
+            self.max = x
+
+    def merge(self, other: "StreamingQuantiles") -> None:
+        if (other.lo, other.hi, other.bins) != (self.lo, self.hi, self.bins):
+            raise ValueError("histogram shapes differ")
+        self.counts = [a + b for a, b in zip(self.counts, other.counts)]
+        self.n += other.n
+        self.sum += other.sum
+        self.max = max(self.max, other.max)
+
+    def quantile(self, q: float) -> float:
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        if self.n == 0:
+            return 0.0
+        rank = q * (self.n - 1)
+        seen = 0
+        for b, c in enumerate(self.counts):
+            if c and seen + c > rank:
+                left, right = self._edges(b)
+                frac = (rank - seen + 0.5) / c
+                return left + (right - left) * frac
+            seen += c
+        return self.max                                  # pragma: no cover
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.n if self.n else 0.0
+
+
+class _Window:
+    """One closed (or the open) time window's counters."""
+
+    def __init__(self, start: float, hist_shape):
+        self.start = start
+        self.hist = StreamingQuantiles(*hist_shape)
+        self.completions = 0
+        self.misses = 0
+
+
+class MetroMetrics:
+    """Windowed streaming metrics sink the metro engine feeds.
+
+    record() takes one completion; busy time per tier accumulates for the
+    utilisation report (the engine supplies the capacity integrals, since
+    only it knows the failure/scale timeline). `window` is the roll width
+    in trace time units; `keep_windows` bounds the recent-statistics ring.
+    """
+
+    def __init__(self, window: float = 60.0, keep_windows: int = 8,
+                 hist_lo: float = 1e-2, hist_hi: float = 1e5,
+                 hist_bins: int = 256):
+        if window <= 0:
+            raise ValueError(f"window must be > 0, got {window}")
+        self._shape = (hist_lo, hist_hi, hist_bins)
+        self.window = window
+        self.total = StreamingQuantiles(*self._shape)
+        self.completions = 0
+        self.misses = 0
+        self.by_class: Dict[str, List[int]] = {}     # class -> [done, missed]
+        self.busy_time: Dict[str, float] = {}        # tier -> sum of proc
+        self.recent: Deque[_Window] = deque(maxlen=max(1, keep_windows))
+        self._open: _Window | None = None
+        self.last_time = 0.0
+
+    # ------------------------------------------------------------- feeding
+    def _roll(self, now: float) -> None:
+        start = math.floor(now / self.window) * self.window
+        if self._open is None:
+            self._open = _Window(start, self._shape)
+        elif start > self._open.start:
+            self.recent.append(self._open)
+            self._open = _Window(start, self._shape)
+
+    def record(self, now: float, wclass: str, response: float,
+               deadline: float, tier: str, proc: float) -> None:
+        """One job completion at sim time `now`."""
+        self._roll(now)
+        missed = response > deadline
+        self.total.add(response)
+        self.completions += 1
+        self.busy_time[tier] = self.busy_time.get(tier, 0.0) + proc
+        row = self.by_class.setdefault(wclass or _UNCLASSED, [0, 0])
+        row[0] += 1
+        if missed:
+            row[1] += 1
+            self.misses += 1
+        w = self._open
+        w.hist.add(response)
+        w.completions += 1
+        w.misses += int(missed)
+        if now > self.last_time:
+            self.last_time = now
+
+    # ------------------------------------------------------------ reading
+    @property
+    def miss_rate(self) -> float:
+        return self.misses / self.completions if self.completions else 0.0
+
+    def miss_rate_by_class(self) -> Dict[str, float]:
+        return {c: (m / d if d else 0.0)
+                for c, (d, m) in sorted(self.by_class.items())}
+
+    def recent_quantile(self, q: float) -> float:
+        """Quantile over the last `keep_windows` closed windows plus the
+        open one — the live-dashboard view of the tail."""
+        merged = StreamingQuantiles(*self._shape)
+        for w in self.recent:
+            merged.merge(w.hist)
+        if self._open is not None:
+            merged.merge(self._open.hist)
+        return merged.quantile(q)
+
+    def summary(self, utilization: Dict[str, float] | None = None) -> dict:
+        """Flat report dict (serve's policy table / the metro benchmark)."""
+        return {
+            "completions": self.completions,
+            "p50": self.total.quantile(0.50),
+            "p95": self.total.quantile(0.95),
+            "p99": self.total.quantile(0.99),
+            "mean_response": self.total.mean,
+            "max_response": self.total.max,
+            "miss_rate": self.miss_rate,
+            "miss_by_class": self.miss_rate_by_class(),
+            "busy_time": dict(sorted(self.busy_time.items())),
+            "utilization": dict(sorted((utilization or {}).items())),
+        }

@@ -1,0 +1,197 @@
+"""Pluggable replanning policies for the metro engine (DESIGN.md §10).
+
+The engine owns ground truth (fleet occupancy, FIFO dispatch, commit
+times); a policy only answers "which tier should each movable job run
+on?" at each decision event, through one `decide` call over the wards
+the event touched. The engine hands every ward's subproblem in the same
+shifted-spec form `online_schedule` replans (release moved to `now`,
+remaining transmission on the committed tier), so search-based policies
+optimise exactly the committed problem (DESIGN.md §7).
+
+Three built-ins:
+
+  * `GreedyPolicy` — commit-on-arrival with the paper's greedy rule
+    against the RESERVED fleet view (queued commitments hold their
+    machines); never revisits a decision.
+  * `TabuPolicy` — `online_schedule(replan="tabu")`-style committed
+    replanning of the affected ward. When one event touches several
+    wards at once (a shared-cloud failure/recovery/scale event reaches
+    every ward at the same event count), all their replans go through a
+    single `scheduler.search_batched` call, so the sweep vectorises on
+    accelerator backends instead of looping ward by ward.
+  * `FleetPolicy` — the contention-aware fixed point: every decision
+    event replans ALL wards jointly via `scheduler.search_fleet`, so
+    no two wards ever double-book the shared metropolitan cloud.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Protocol, Sequence
+
+from repro.core import scheduler
+from repro.core.simulator import JobSpec
+from repro.core.tiers import CC, ED, ES
+
+
+@dataclass
+class ReplanRequest:
+    """One ward's movable subproblem at a decision event."""
+    ward: int
+    movable: List[int]                  # ward-local job indices
+    shifted: List[JobSpec]              # online-style replan specs
+    current: List[Optional[str]]        # committed tier per movable job
+    fresh: List[int]                    # positions in `movable` new this event
+    busy: Dict[str, List[float]]        # started-occupancy per shared tier
+    reserved: Dict[str, List[float]]    # per-machine frees incl. queued jobs
+    machines_per_tier: Dict[str, int]
+    background: List[JobSpec] = None    # OTHER wards' unstarted cloud
+                                        # commitments (shifted), queue-active
+                                        # but immovable for this ward
+
+
+class Policy(Protocol):
+    """What the engine needs from a policy. `joint` policies replan every
+    ward at every decision event; `replans_on_fleet_events` ones get a
+    decide() call on failure/recovery/scale events (otherwise the engine
+    just re-times the committed tiers around the changed capacity)."""
+    name: str
+    joint: bool
+    replans_on_fleet_events: bool
+
+    def decide(self, requests: Sequence[ReplanRequest], now: float
+               ) -> List[List[str]]:
+        """One tier list per request, aligned with its `movable`."""
+        ...                                               # pragma: no cover
+
+
+@dataclass
+class GreedyPolicy:
+    """Paper greedy, one arrival at a time: the new job takes the machine
+    minimising its completion given every reservation so far; existing
+    commitments keep their tier (the engine re-times them around
+    failures). The myopic baseline every replanner must beat."""
+    name: str = "greedy"
+    joint: bool = False
+    replans_on_fleet_events: bool = False
+
+    def decide(self, requests, now):
+        out = []
+        for req in requests:
+            resv = {t: list(req.reserved.get(t, ())) for t in (CC, ES)}
+            tiers = list(req.current)
+            for pos in req.fresh:
+                job = req.shifted[pos]
+                tier = scheduler.greedy_schedule(
+                    [job], machines_per_tier=req.machines_per_tier,
+                    busy_until=resv)[0]
+                tiers[pos] = tier
+                if tier != ED:
+                    vec = resv[tier]
+                    k = min(range(len(vec)), key=vec.__getitem__)
+                    arr = job.release + job.trans.get(tier, 0.0)
+                    vec[k] = max(arr, vec[k]) + job.proc[tier]
+            if any(t is None for t in tiers):
+                raise ValueError("greedy saw a non-fresh uncommitted job")
+            out.append(tiers)
+        return out
+
+
+@dataclass
+class TabuPolicy:
+    """Committed tabu replanning (`online_schedule(replan="tabu")`): every
+    decision event re-searches the affected ward's movable jobs against
+    the started-occupancy fleet state. Multi-ward events batch through
+    `scheduler.search_batched` — the "replans batched across wards at
+    matching event counts" path that closes the event-sequential ROADMAP
+    item."""
+    max_count: int = 5
+    jax_threshold: Optional[int] = None
+    min_batch: Optional[int] = None
+    name: str = "tabu"
+    joint: bool = False
+    replans_on_fleet_events: bool = True
+
+    @staticmethod
+    def _augment(req: ReplanRequest):
+        """-> (jobs, initial, frozen) with the other wards' unstarted
+        cloud commitments as frozen background (`online_schedule_fleet`'s
+        view — ward-local decisions, fleet-true queueing)."""
+        bg = list(req.background or ())
+        if not bg:
+            return list(req.shifted), None, None
+        jobs = list(req.shifted) + bg
+        initial = [t if t is not None else ED for t in req.current] \
+            + [CC] * len(bg)
+        return jobs, initial, [False] * len(req.shifted) + [True] * len(bg)
+
+    def decide(self, requests, now):
+        n_own = [len(req.shifted) for req in requests]
+        if len(requests) == 1:
+            req = requests[0]
+            jobs, initial, frozen = self._augment(req)
+            plan = scheduler.search(
+                jobs, initial=initial, frozen=frozen,
+                max_count=self.max_count,
+                jax_threshold=self.jax_threshold,
+                machines_per_tier=req.machines_per_tier,
+                busy_until=req.busy)
+            return [plan.assignment()[:n_own[0]]]
+        augmented = [self._augment(req) for req in requests]
+        if any(init is not None for _, init, _ in augmented):
+            # the batched backend wants initials for all wards or none
+            augmented = [
+                (jobs,
+                 init if init is not None
+                 else [t if t is not None else ED for t in req.current],
+                 fr if fr is not None else [False] * len(jobs))
+                for (jobs, init, fr), req in zip(augmented, requests)]
+        plans = scheduler.search_batched(
+            [jobs for jobs, _, _ in augmented], max_count=self.max_count,
+            machines_per_tier=[req.machines_per_tier for req in requests],
+            busy_until=[req.busy for req in requests],
+            initial=[init for _, init, _ in augmented]
+            if augmented[0][1] is not None else None,
+            frozen=[fr for _, _, fr in augmented]
+            if augmented[0][2] is not None else None,
+            min_batch=self.min_batch, jax_threshold=self.jax_threshold)
+        return [plan.assignment()[:n]
+                for plan, n in zip(plans, n_own)]
+
+
+@dataclass
+class FleetPolicy:
+    """Joint fixed-point replanning: all wards' movable jobs re-searched
+    together by `scheduler.search_fleet`, so the shared cloud's merged
+    FIFO queue is priced into every decision (DESIGN.md §9). Budgets are
+    deliberately small — each event only needs local repair on top of
+    the previous fixed point."""
+    max_count: int = 3
+    max_sweeps: int = 2
+    sweep_max_count: int = 2
+    jax_threshold: Optional[int] = None
+    name: str = "fleet"
+    joint: bool = True
+    replans_on_fleet_events: bool = True
+
+    def decide(self, requests, now):
+        shared = requests[0].busy.get(CC, [])
+        plan = scheduler.search_fleet(
+            [req.shifted for req in requests],
+            machines_per_tier=[req.machines_per_tier for req in requests],
+            max_count=self.max_count, max_sweeps=self.max_sweeps,
+            sweep_max_count=self.sweep_max_count,
+            jax_threshold=self.jax_threshold,
+            busy_until={CC: list(shared)} if shared else None,
+            ward_busy_until=[{ES: req.busy.get(ES, [])}
+                             for req in requests])
+        return [list(a) for a in plan.assignments]
+
+
+def make_policy(name: str, **kw) -> Policy:
+    """Factory keyed by the names serve/benchmarks print."""
+    try:
+        cls = {"greedy": GreedyPolicy, "tabu": TabuPolicy,
+               "fleet": FleetPolicy}[name]
+    except KeyError:
+        raise ValueError(f"unknown metro policy {name!r}") from None
+    return cls(**kw)

@@ -1,0 +1,185 @@
+"""Patient-episode traffic generators for the metro engine (DESIGN.md §10).
+
+A patient EPISODE is the paper's three-app cascade in clinical order —
+short-of-breath alert, then the phenotype classification it triggers,
+then the life-death threat assessment — released as a correlated burst
+(each stage follows the previous by a small random lag). Episode start
+times come from a nonhomogeneous Poisson process whose intensity carries
+a diurnal swing plus optional mass-casualty surge windows; sampling is by
+thinning, so a given `rng` yields a bit-identical trace.
+
+Costs reuse `problems.metro_costs` (the Table VI metro regime the §9
+contention benchmark is built on) scaled per stage: the life-death model
+is tiny (paper Table IV: 7.5k FLOPs), the phenotype classifier heavy
+(347k). Deadlines are per-workload-class response budgets carried on
+`JobSpec.deadline`; one trace time unit reads as one minute.
+
+Also provides the fleet-event streams the engine consumes: Poisson
+machine failures with repair times, and surge-following elastic scale
+events.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.problems import metro_costs
+from repro.core.simulator import JobSpec
+from repro.core.tiers import CC
+from repro.metro.engine import FailureEvent, ScaleEvent
+
+DAY = 1440.0                      # minutes
+
+
+@dataclass(frozen=True)
+class EpisodeStage:
+    """One app of the episode cascade: who it is, how urgent, how big."""
+    workload: str                 # ICULSTMConfig name (serving engine key)
+    short: str                    # job-name suffix
+    weight: float                 # paper Table IV priority
+    deadline: float               # response SLA budget (time units)
+    cost_scale: float             # metro_costs scale (FLOPs-proportional)
+    lag: Tuple[float, float]      # uniform delay after the previous stage
+
+
+# Paper Table IV: alerts w=2 (105k FLOPs), phenotype w=1 (347k),
+# life-death w=2 (7.5k). Deadlines tighten with clinical urgency.
+EPISODE_STAGES: Tuple[EpisodeStage, ...] = (
+    EpisodeStage("short-of-breath-alerts", "alert",
+                 weight=2.0, deadline=35.0, cost_scale=0.6,
+                 lag=(0.0, 0.0)),
+    EpisodeStage("patient-phenotype-classification", "phenotype",
+                 weight=1.0, deadline=120.0, cost_scale=1.4,
+                 lag=(0.5, 2.0)),
+    EpisodeStage("life-death-prediction", "threat",
+                 weight=2.0, deadline=18.0, cost_scale=0.25,
+                 lag=(0.5, 2.0)),
+)
+
+
+def intensity(t: float, base_rate: float, *, diurnal_amp: float = 0.5,
+              day_offset: float = 8 * 60.0,
+              surges: Sequence[Tuple[float, float, float]] = ()) -> float:
+    """Episode arrival intensity at trace time t (episodes per unit).
+
+    Diurnal swing peaks six hours after `day_offset` (start-of-trace
+    clock time); each surge (t0, t1, boost) multiplies the rate by
+    1 + boost inside its window — the ER mass-casualty regime."""
+    lam = base_rate * (1.0 + diurnal_amp
+                       * math.sin(2.0 * math.pi * (t + day_offset) / DAY))
+    for t0, t1, boost in surges:
+        if t0 <= t < t1:
+            lam *= 1.0 + boost
+    return max(lam, 0.0)
+
+
+def episode_times(rng: np.random.Generator, horizon: float,
+                  base_rate: float, **kw) -> List[float]:
+    """Nonhomogeneous Poisson episode starts in [0, horizon) by thinning."""
+    surges = kw.get("surges", ())
+    # envelope over ALL surge windows at once: intensity() multiplies the
+    # (1 + boost) factors of every window containing t, so overlapping
+    # windows compound — the product is the only sound thinning bound
+    boost = 1.0
+    for _, _, b in surges:
+        boost *= 1.0 + b
+    lam_max = base_rate * (1.0 + kw.get("diurnal_amp", 0.5)) * boost
+    if lam_max <= 0:
+        raise ValueError(f"nonpositive peak intensity {lam_max}")
+    out, t = [], 0.0
+    while True:
+        t += float(rng.exponential(1.0 / lam_max))
+        if t >= horizon:
+            return out
+        if float(rng.uniform()) * lam_max <= intensity(t, base_rate, **kw):
+            out.append(t)
+
+
+def ward_trace(rng: np.random.Generator, ward: int, horizon: float, *,
+               base_rate: float = 0.15, diurnal_amp: float = 0.5,
+               day_offset: float = 8 * 60.0,
+               surges: Sequence[Tuple[float, float, float]] = (),
+               stages: Sequence[EpisodeStage] = EPISODE_STAGES
+               ) -> List[JobSpec]:
+    """One ward's job stream: every episode expands into the staged
+    cascade (stages releasing past `horizon` still emit — an admitted
+    patient is followed to the end). Sorted by release; stable job
+    naming (`w<ward>p<episode>-<stage>`) keys the event log."""
+    jobs: List[JobSpec] = []
+    for ep, t0 in enumerate(episode_times(
+            rng, horizon, base_rate, diurnal_amp=diurnal_amp,
+            day_offset=day_offset, surges=surges)):
+        t = t0
+        for stage in stages:
+            lo, hi = stage.lag
+            t += float(rng.uniform(lo, hi)) if hi > lo else lo
+            proc, trans = metro_costs(rng, scale=stage.cost_scale)
+            jobs.append(JobSpec(
+                name=f"w{ward}p{ep}-{stage.short}", release=t,
+                weight=stage.weight, proc=proc, trans=trans,
+                workload=stage.workload, deadline=stage.deadline))
+    jobs.sort(key=lambda j: (j.release, j.name))
+    return jobs
+
+
+def metro_traces(rng: np.random.Generator, wards: int, horizon: float,
+                 **kw) -> List[List[JobSpec]]:
+    """Per-ward traces off one rng stream (ward draws are sequential, so
+    the whole fleet's traffic is one seed)."""
+    return [ward_trace(rng, b, horizon, **kw) for b in range(wards)]
+
+
+def failure_events(rng: np.random.Generator, horizon: float, *,
+                   tier: str = CC, ward: int | None = None,
+                   mtbf: float = 60.0,
+                   mttr: Tuple[float, float] = (8.0, 20.0)
+                   ) -> List[FailureEvent]:
+    """Poisson machine failures on one pool: exponential inter-failure
+    times (`mtbf`), uniform repair durations (`mttr`). Cloud failures
+    (ward=None) hit the shared pool and so replan every ward at one
+    event count — the batched-replan trigger (DESIGN.md §10)."""
+    out, t = [], 0.0
+    while True:
+        t += float(rng.exponential(mtbf))
+        if t >= horizon:
+            return out
+        out.append(FailureEvent(time=t, tier=tier, ward=ward,
+                                duration=float(rng.uniform(*mttr))))
+
+
+def default_scenario(seed: int, wards: int = 4, horizon: float = 120.0, *,
+                     base_rate: float = 0.12,
+                     surges: Sequence[Tuple[float, float, float]] | None
+                     = None,
+                     mtbf: float = 35.0, elastic: bool = True):
+    """The canonical metro benchmark scenario (serve --metro and
+    benchmarks/scheduler_scale.py share it): `wards` wards at a diurnal
+    base rate with one mid-run mass-casualty surge, Poisson cloud
+    machine failures, and elastic cloud capacity tracking the surge.
+    -> (ward_traces, failure_events, scale_events)."""
+    if surges is None:
+        surges = ((0.375 * horizon, 0.625 * horizon, 3.0),)
+    tr = metro_traces(np.random.default_rng(seed), wards, horizon,
+                      base_rate=base_rate, surges=surges)
+    fails = failure_events(np.random.default_rng(seed + 1), horizon,
+                           mtbf=mtbf)
+    scales = surge_scale_events(surges) if elastic else []
+    return tr, fails, scales
+
+
+def surge_scale_events(surges: Sequence[Tuple[float, float, float]], *,
+                       tier: str = CC, machines: int = 1
+                       ) -> List[ScaleEvent]:
+    """Elastic capacity tracking the surge windows: +machines at each
+    surge start, -machines at its end (the scaled-down servers retire
+    once their running job drains)."""
+    out: List[ScaleEvent] = []
+    for t0, t1, _ in surges:
+        out.append(ScaleEvent(time=t0, tier=tier, ward=None,
+                              delta=machines))
+        out.append(ScaleEvent(time=t1, tier=tier, ward=None,
+                              delta=-machines))
+    return out

@@ -1,0 +1,304 @@
+"""Metro traffic engine tests (DESIGN.md §10): seeded determinism,
+event-order/capacity invariants, failure semantics (a running job is
+never dropped; its machine's successors are delayed), B=1 parity with
+`online_schedule`, and the streaming metrics layer."""
+import numpy as np
+import pytest
+
+from repro.core import online
+from repro.core.problems import poisson_jobs
+from repro.core.tiers import CC, ED, ES
+from repro.metro import traces
+from repro.metro.engine import (FailureEvent, MetroEngine, ScaleEvent,
+                                simulate_metro)
+from repro.metro.metrics import MetroMetrics, StreamingQuantiles
+from repro.metro.policies import (GreedyPolicy, TabuPolicy, make_policy)
+from repro.core.simulator import JobSpec
+
+MPT = {CC: 2, ES: 2}
+
+
+def _scenario(seed=0, wards=2, horizon=60.0, **kw):
+    return traces.default_scenario(seed, wards, horizon, **kw)
+
+
+def _cloud_job(name, release, proc_c, trans_c=2.0, deadline=float("inf")):
+    """A job only the cloud can run sensibly (edge/device prohibitive)."""
+    return JobSpec(name=name, release=release, weight=1.0,
+                   proc={CC: proc_c, ES: 500.0, ED: 500.0},
+                   trans={CC: trans_c, ES: 0.0, ED: 0.0},
+                   deadline=deadline)
+
+
+# ------------------------------------------------------------ determinism
+def test_seed_determinism_bit_identical():
+    runs = []
+    for _ in range(2):
+        tr, fails, scales = _scenario(seed=7)
+        res = simulate_metro(tr, TabuPolicy(), machines_per_tier=MPT,
+                             failures=fails, scale_events=scales)
+        runs.append(res)
+    a, b = runs
+    assert a.event_log == b.event_log
+    assert a.metrics.summary(a.utilization) == \
+        b.metrics.summary(b.utilization)
+    for sa, sb in zip(a.wards, b.wards):
+        assert sa.weighted_sum == sb.weighted_sum
+
+
+def test_trace_determinism_and_episode_structure():
+    t1 = traces.ward_trace(np.random.default_rng(3), 0, 90.0)
+    t2 = traces.ward_trace(np.random.default_rng(3), 0, 90.0)
+    assert [(j.name, j.release, j.deadline) for j in t1] == \
+        [(j.name, j.release, j.deadline) for j in t2]
+    # every episode is the full cascade, in clinical order
+    by_ep = {}
+    for j in t1:
+        by_ep.setdefault(j.name.split("-")[0], []).append(j)
+    stage_of = {s.short: s for s in traces.EPISODE_STAGES}
+    for ep_jobs in by_ep.values():
+        assert len(ep_jobs) == len(traces.EPISODE_STAGES)
+        order = {j.name.split("-")[1]: j for j in ep_jobs}
+        assert order["alert"].release <= order["phenotype"].release \
+            <= order["threat"].release
+        for short, j in order.items():
+            st = stage_of[short]
+            assert (j.weight, j.deadline, j.workload) == \
+                (st.weight, st.deadline, st.workload)
+
+
+def test_intensity_surge_and_diurnal():
+    lam_base = traces.intensity(10.0, 1.0, diurnal_amp=0.0)
+    assert lam_base == 1.0
+    surged = traces.intensity(10.0, 1.0, diurnal_amp=0.0,
+                              surges=[(5.0, 15.0, 3.0)])
+    assert surged == pytest.approx(4.0)
+    # surge windows really carry more episodes
+    times = traces.episode_times(np.random.default_rng(0), 400.0, 0.2,
+                                 diurnal_amp=0.0,
+                                 surges=[(100.0, 200.0, 4.0)])
+    inside = sum(100.0 <= t < 200.0 for t in times)
+    outside = len(times) - inside
+    assert inside > outside
+    # overlapping surges COMPOUND; the thinning envelope must cover the
+    # product or the sampled rate silently caps below the declared one
+    over = traces.episode_times(np.random.default_rng(1), 40.0, 0.5,
+                                diurnal_amp=0.0,
+                                surges=[(0.0, 30.0, 3.0),
+                                        (10.0, 40.0, 3.0)])
+    in_overlap = sum(10.0 <= t < 30.0 for t in over)    # 16x base rate
+    in_single = sum(t < 10.0 for t in over)             # 4x base rate
+    assert in_overlap > 2 * in_single
+
+
+# ------------------------------------------------- parity with DESIGN.md §7
+def test_b1_no_failure_tabu_matches_online_schedule():
+    for seed in range(4):
+        for mpt in ({CC: 1, ES: 1}, {CC: 2, ES: 3}):
+            jobs = poisson_jobs(np.random.default_rng(seed), n=14,
+                                rate=0.3)
+            ref = online.online_schedule(jobs, replan="tabu",
+                                         machines_per_tier=mpt)
+            got = simulate_metro([jobs], TabuPolicy(),
+                                 machines_per_tier=mpt).wards[0]
+            assert len(ref.entries) == len(got.entries)
+            for a, b in zip(ref.entries, got.entries):
+                assert (a.machine, a.arrival, a.start, a.end) == \
+                    (b.machine, b.arrival, b.start, b.end)
+            assert ref.weighted_sum == got.weighted_sum
+
+
+# ------------------------------------------------------- event invariants
+def _check_schedule_invariants(result, machines_per_tier, elastic=False):
+    for sched in result.wards:
+        for e in sched.entries:
+            assert e.arrival >= e.job.release - 1e-9
+            assert e.start >= e.arrival - 1e-9
+            assert e.end == pytest.approx(e.start + e.job.proc[e.machine])
+    # shared-pool concurrency never exceeds capacity (sweep line); the
+    # cloud pool is fleet-wide, edge pools per ward
+    def overlap_ok(spans, cap):
+        events = sorted((s, 1) for s, _ in spans) + \
+            sorted((t, -1) for _, t in spans)
+        events.sort()
+        live = peak = 0
+        for _, d in events:
+            live += d
+            peak = max(peak, live)
+        return peak <= cap
+    cloud_spans = [(e.start, e.end) for s in result.wards
+                   for e in s.entries if e.machine == CC]
+    if not elastic:
+        assert overlap_ok(cloud_spans, machines_per_tier[CC])
+    for s in result.wards:
+        spans = [(e.start, e.end) for e in s.entries if e.machine == ES]
+        assert overlap_ok(spans, machines_per_tier[ES])
+    # the log's completions carry the committed, deadline-scored truth
+    completes = [ev for ev in result.event_log if ev[0] == "complete"]
+    assert len(completes) == sum(len(s.entries) for s in result.wards)
+    for _, t, b, i, tier, start, end, response, missed in completes:
+        e = result.wards[b].entries[i]
+        assert (tier, start, end) == (e.machine, e.start, e.end)
+        assert t == end and start <= end
+        assert response == pytest.approx(end - e.job.release)
+        assert missed == int(response > e.job.deadline)
+
+
+@pytest.mark.parametrize("policy", ["greedy", "tabu", "fleet"])
+def test_event_order_invariants(policy):
+    tr, fails, _ = _scenario(seed=11, wards=2, horizon=45.0,
+                             elastic=False)
+    kw = dict(max_count=2, max_sweeps=1) if policy == "fleet" else {}
+    res = simulate_metro(tr, make_policy(policy, **kw),
+                         machines_per_tier=MPT, failures=fails)
+    _check_schedule_invariants(res, MPT)
+    assert 0.0 <= res.metrics.miss_rate <= 1.0
+    assert res.events > sum(len(t) for t in tr)
+
+
+# ------------------------------------------------------- failure semantics
+def test_failure_never_drops_running_job_and_delays_successors():
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0),
+            _cloud_job("B", 1.0, proc_c=5.0, trans_c=1.0)]
+    base = simulate_metro([jobs], GreedyPolicy(),
+                          machines_per_tier={CC: 1, ES: 1})
+    a0, b0 = base.wards[0].entries
+    assert (a0.machine, b0.machine) == (CC, CC)
+    assert a0.end == 12.0 and b0.start == 12.0
+    # machine fails mid-run of A: A is NOT dropped (end unchanged), the
+    # machine repairs after finishing A, and B waits for the repair
+    fail = FailureEvent(time=5.0, tier=CC, duration=10.0)
+    res = simulate_metro([jobs], GreedyPolicy(),
+                         machines_per_tier={CC: 1, ES: 1},
+                         failures=[fail])
+    a, b = res.wards[0].entries
+    assert (a.start, a.end) == (a0.start, a0.end)
+    assert b.start == a0.end + 10.0 and b.end == b.start + 5.0
+    kinds = [ev[0] for ev in res.event_log]
+    assert "fail" in kinds and "recover" in kinds
+    fail_ev = next(ev for ev in res.event_log if ev[0] == "fail")
+    assert fail_ev[5] == a0.end + 10.0            # repaired after A drains
+
+
+def test_tabu_replans_around_failure():
+    # same fleet, but an edge escape route exists: the replanner should
+    # beat (or match) greedy's committed-and-wait response
+    jobs = [JobSpec("A", 0.0, 1.0, {CC: 10.0, ES: 30.0, ED: 60.0},
+                    {CC: 2.0, ES: 1.0, ED: 0.0}),
+            JobSpec("B", 1.0, 1.0, {CC: 5.0, ES: 12.0, ED: 60.0},
+                    {CC: 1.0, ES: 1.0, ED: 0.0})]
+    fail = FailureEvent(time=5.0, tier=CC, duration=30.0)
+    greedy = simulate_metro([jobs], GreedyPolicy(),
+                            machines_per_tier={CC: 1, ES: 1},
+                            failures=[fail])
+    tabu = simulate_metro([jobs], TabuPolicy(),
+                          machines_per_tier={CC: 1, ES: 1},
+                          failures=[fail])
+    assert tabu.wards[0].weighted_sum <= greedy.wards[0].weighted_sum
+    # the running job is immutable for BOTH policies
+    assert tabu.wards[0].entries[0].end == \
+        greedy.wards[0].entries[0].end
+
+
+def test_elastic_scale_up_and_down():
+    jobs = [_cloud_job("A", 0.0, proc_c=20.0),
+            _cloud_job("B", 0.0, proc_c=20.0, trans_c=3.0)]
+    seq = simulate_metro([jobs], GreedyPolicy(),
+                         machines_per_tier={CC: 1, ES: 1})
+    a0, b0 = seq.wards[0].entries
+    assert b0.start >= a0.end                       # one machine: serial
+    up = simulate_metro([jobs], GreedyPolicy(),
+                        machines_per_tier={CC: 1, ES: 1},
+                        scale_events=[ScaleEvent(time=1.0, tier=CC,
+                                                 delta=1)])
+    a1, b1 = up.wards[0].entries
+    assert b1.start < a1.end                        # overlapping now
+    with pytest.raises(ValueError):
+        simulate_metro([jobs], GreedyPolicy(),
+                       machines_per_tier={CC: 1, ES: 1},
+                       scale_events=[ScaleEvent(time=1.0, tier=CC,
+                                                delta=-1)])
+
+
+# --------------------------------------------------------------- metrics
+def test_streaming_quantiles_accuracy_and_merge():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(2.0, 1.0, size=5000)
+    sq = StreamingQuantiles()
+    half = StreamingQuantiles()
+    for i, x in enumerate(xs):
+        (sq if i % 2 == 0 else half).add(float(x))
+    sq.merge(half)
+    assert sq.n == len(xs)
+    for q in (0.5, 0.95, 0.99):
+        exact = float(np.quantile(xs, q))
+        assert sq.quantile(q) == pytest.approx(exact, rel=0.06)
+    assert sq.max == pytest.approx(float(xs.max()))
+    assert sq.mean == pytest.approx(float(xs.mean()))
+
+
+def test_metrics_windowing_bounded_and_miss_accounting():
+    m = MetroMetrics(window=10.0, keep_windows=3)
+    for k in range(400):
+        t = float(k)
+        m.record(t, "threat" if k % 2 else "alert",
+                 response=5.0 + (k % 7), deadline=8.0, tier=CC, proc=1.0)
+    assert len(m.recent) == 3                       # ring stays bounded
+    assert m.completions == 400
+    by = m.miss_rate_by_class()
+    assert set(by) == {"threat", "alert"}
+    # responses cycle 5..11 against deadline 8 -> misses are exact
+    expect = sum(1 for k in range(400) if 5.0 + (k % 7) > 8.0) / 400
+    assert m.miss_rate == pytest.approx(expect)
+    assert m.recent_quantile(0.5) > 0
+    assert m.busy_time[CC] == pytest.approx(400.0)
+
+
+def test_metrics_in_engine_summary():
+    tr, fails, scales = _scenario(seed=5, wards=2, horizon=40.0)
+    res = simulate_metro(tr, GreedyPolicy(), machines_per_tier=MPT,
+                         failures=fails, scale_events=scales)
+    s = res.summary()
+    for key in ("p50", "p95", "p99", "miss_rate", "utilization",
+                "events_per_s", "completions"):
+        assert key in s
+    assert s["completions"] == sum(len(t) for t in tr)
+    assert 0.0 < s["utilization"]["cloud"] <= 1.0
+    assert 0.0 < s["utilization"]["edge"] <= 1.0
+
+
+def test_engine_rejects_reuse_and_bad_events():
+    tr, _, _ = _scenario(seed=1, wards=1, horizon=20.0)
+    eng = MetroEngine(tr, GreedyPolicy(), machines_per_tier=MPT)
+    eng.run()
+    with pytest.raises(ValueError):
+        eng.run()
+    with pytest.raises(ValueError):
+        MetroEngine(tr, GreedyPolicy(), machines_per_tier=MPT,
+                    failures=[FailureEvent(time=1.0, tier=CC, ward=0)])
+    with pytest.raises(ValueError):
+        MetroEngine(tr, GreedyPolicy(), machines_per_tier=MPT,
+                    failures=[FailureEvent(time=1.0, tier=ED)])
+    with pytest.raises(ValueError):
+        MetroEngine([], GreedyPolicy())
+
+
+# ------------------------------------------------------ policy comparison
+def test_policy_comparison_smoke():
+    tr, fails, scales = _scenario(seed=9, wards=2, horizon=50.0)
+    out = {}
+    for name in ("greedy", "tabu", "fleet"):
+        kw = dict(max_count=2, max_sweeps=1) if name == "fleet" else {}
+        out[name] = simulate_metro(
+            tr, make_policy(name, **kw), machines_per_tier=MPT,
+            failures=fails, scale_events=scales)
+    # replanners should not lose to commit-and-hold on mean response
+    assert out["tabu"].metrics.total.mean <= \
+        out["greedy"].metrics.total.mean * 1.05
+    for res in out.values():
+        assert res.metrics.completions == sum(len(t) for t in tr)
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_policy("nope")

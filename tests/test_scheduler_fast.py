@@ -204,3 +204,76 @@ class TestSearchDispatch:
             for e in s.entries:
                 assert e.start >= e.job.release + e.job.trans[e.machine] \
                     - 1e-9
+
+
+# ------------------------------------------------- compiled-shape dispatch
+class TestCompiledShapeCache:
+    def test_second_same_shape_call_uses_jax(self, monkeypatch):
+        """A CPU `search` whose (n, fleet, objective) shape an earlier
+        call already compiled dispatches to the jitted backend
+        (ROADMAP: repeating replans stop paying Python-path costs)."""
+        monkeypatch.setattr(scheduler, "_COMPILED_SHAPES", set())
+        calls = []
+        real = scheduler_jax.tabu_search_jax
+
+        def spy(*args, **kw):
+            calls.append(kw.get("machines_per_tier"))
+            return real(*args, **kw)
+
+        monkeypatch.setattr(scheduler_jax, "tabu_search_jax", spy)
+        jobs = _random_jobs(np.random.default_rng(0), 9)
+        mpt = {CC: 2, ES: 1}
+
+        first = scheduler.search(jobs, machines_per_tier=mpt)
+        assert calls == []                      # below threshold: Python
+        forced = scheduler.search(jobs, machines_per_tier=mpt,
+                                  jax_threshold=0)
+        assert len(calls) == 1                  # explicit: compiles shape
+        cached = scheduler.search(jobs, machines_per_tier=mpt)
+        assert len(calls) == 2                  # same shape: jitted now
+        assert cached.weighted_sum == forced.weighted_sum
+        assert first.weighted_sum > 0
+
+        other = _random_jobs(np.random.default_rng(1), 10)
+        scheduler.search(other, machines_per_tier=mpt)
+        assert len(calls) == 2                  # new n: Python path again
+        scheduler.search(jobs, machines_per_tier={CC: 1, ES: 1})
+        assert len(calls) == 2                  # new fleet: Python path
+        scheduler.search(jobs, machines_per_tier=mpt,
+                         objective="unweighted")
+        assert len(calls) == 2                  # new objective: Python
+
+
+# ----------------------------------------- batched initial/frozen threading
+class TestBatchedInitialFrozen:
+    def test_mixed_initials_agree_across_dispatch_paths(self):
+        """A per-ward `initial` with gaps works on BOTH search_batched
+        paths: the sequential fallback and the batched backend (which
+        fills the gaps with the same greedy initial the solo path
+        uses)."""
+        probs = [_random_jobs(np.random.default_rng(s), 6)
+                 for s in range(4)]
+        initial = [["cloud"] * 6, None, ["device"] * 6, None]
+        seq = scheduler.search_batched(probs, max_count=3,
+                                       initial=initial, min_batch=99)
+        bat = scheduler.search_batched(probs, max_count=3,
+                                       initial=initial, min_batch=1)
+        for s, b in zip(seq, bat):
+            assert len(s.entries) == len(b.entries) == 6
+            assert s.weighted_sum > 0 and b.weighted_sum > 0
+
+    def test_frozen_background_via_search_batched(self):
+        """frozen masks ride through search_batched to both backends and
+        pin the background jobs' tiers."""
+        probs = [_random_jobs(np.random.default_rng(s), 5)
+                 for s in range(2)]
+        initial = [["cloud", "cloud", "device", "device", "device"]] * 2
+        frozen = [[True, True, False, False, False]] * 2
+        for min_batch in (99, 1):
+            plans = scheduler.search_batched(
+                probs, max_count=3, initial=initial, frozen=frozen,
+                min_batch=min_batch)
+            for p in plans:
+                assert p.assignment()[:2] == ["cloud", "cloud"]
+        with pytest.raises(ValueError):
+            scheduler.search_batched(probs, frozen=frozen, min_batch=1)
