@@ -31,7 +31,19 @@ hardware — regenerate the baseline when the CI host changes):
     traffic engine must keep its event throughput and the tabu-vs-greedy
     deadline miss-rate win (DESIGN.md §10); plus the hard invariant that
     the improvement stays strictly > 1 whenever a fresh metro section
-    exists.
+    exists;
+  * per chaos scenario pack (``metro_scenarios``, DESIGN.md §11):
+    ``events_per_s``, the tabu-vs-greedy ``miss_rate_improvement`` and
+    the shedding policy's ``critical_improvement_shed``; plus hard
+    ranking invariants — whenever the committed baseline shows a policy
+    winning a pack (improvement > 1), the fresh run must not show it
+    losing (<= 1), whatever the tolerance.
+
+Wall-clock throughput floors (events/s, wards/s, speedups) are prone to
+host-throttling flakes: ``--runs N`` re-measures ONLY the failed
+wall-clock floors up to N-1 more times and gates on the best
+observation. Invariant and quality floors stay single-shot — a ranking
+loss or parity mismatch is not a flake.
 
 Invocation (documented in ROADMAP.md):
 
@@ -45,6 +57,15 @@ import json
 import os
 import sys
 import tempfile
+
+# metrics measured from wall-clock timings (rerunnable via --runs);
+# everything else is deterministic quality and stays single-shot
+_WALL_CLOCK_TOKENS = ("events_per_s", "wards_per_s", "speedup",
+                      "jax_vs_incremental")
+
+
+def _is_wall_clock(key: str) -> bool:
+    return any(tok in key for tok in _WALL_CLOCK_TOKENS)
 
 
 def _head_to_head_metrics(report: dict) -> dict:
@@ -91,22 +112,41 @@ def _metro_metrics(report: dict) -> dict:
     return out
 
 
-def compare(committed: dict, fresh: dict, tolerance: float = 0.30
-            ) -> list:
+def _metro_scenario_metrics(report: dict) -> dict:
+    out = {}
+    for pack, m in sorted((report.get("metro_scenarios") or {}).items()):
+        for key in ("events_per_s", "miss_rate_improvement",
+                    "critical_improvement_shed"):
+            if m.get(key):         # None improvements are vacuous: skip
+                out[f"metro_scenarios/{pack}/{key}"] = m[key]
+    return out
+
+
+_METRIC_FNS = (_head_to_head_metrics, _batched_metrics,
+               _contention_metrics, _metro_metrics,
+               _metro_scenario_metrics)
+
+
+def compare(committed: dict, fresh: dict, tolerance: float = 0.30,
+            best: dict | None = None) -> list:
     """-> list of human-readable regression strings (empty == pass).
 
     A metric regresses when fresh < committed * (1 - tolerance). Metrics
     present in only one report are skipped (the gate tightens as the
     committed baseline gains sections, and never blocks on new ones).
+    `best` overlays best-of-N re-measurements per metric key — callers
+    populate it only for wall-clock floors (--runs), so invariant and
+    quality floors always gate on the single fresh run.
     """
     problems = []
-    for metrics in (_head_to_head_metrics, _batched_metrics,
-                    _contention_metrics, _metro_metrics):
+    for metrics in _METRIC_FNS:
         com, fre = metrics(committed), metrics(fresh)
         for key, floor in com.items():
             got = fre.get(key)
             if got is None:
                 continue
+            if best and best.get(key, got) > got:
+                got = best[key]
             if got < floor * (1.0 - tolerance):
                 problems.append(
                     f"{key}: {got:.3g} < committed {floor:.3g} "
@@ -143,7 +183,53 @@ def compare(committed: dict, fresh: dict, tolerance: float = 0.30
             problems.append(
                 f"metro/miss_rate_improvement: {imp} <= 1 (tabu replan "
                 f"no longer beats greedy on deadline miss-rate)")
+    # per-scenario ranking invariants (DESIGN.md §11): a policy the
+    # committed baseline shows WINNING a chaos pack (ratio > 1) must not
+    # show up losing it (<= 1) in the fresh run — tolerance never
+    # excuses a rank flip. Fresh None stays vacuous (greedy perfect).
+    com_sc = committed.get("metro_scenarios") or {}
+    fre_sc = fresh.get("metro_scenarios") or {}
+    for pack in sorted(set(com_sc) & set(fre_sc)):
+        for field, label in (
+                ("miss_rate_improvement", "tabu replan"),
+                ("critical_improvement_shed",
+                 "shedding's life-critical protection")):
+            floor = com_sc[pack].get(field)
+            got = fre_sc[pack].get(field)
+            if floor is not None and floor > 1.0 \
+                    and got is not None and not got > 1.0:
+                problems.append(
+                    f"metro_scenarios/{pack}/{field}: {got:.3g} <= 1 "
+                    f"(committed {floor:.3g}; {label} no longer wins "
+                    f"this pack)")
     return problems
+
+
+def _remeasure(failed_keys) -> dict:
+    """Re-run ONLY the benchmark sections behind the failed wall-clock
+    floors; -> a partial report holding just those sections."""
+    import scheduler_scale as ss
+
+    sections, packs = set(), set()
+    for key in failed_keys:
+        head = key.split("/", 1)[0]
+        if head == "metro_scenarios":
+            packs.add(key.split("/")[1])
+        else:
+            sections.add("head_to_head" if head.startswith("n") else head)
+    partial: dict = {}
+    if "head_to_head" in sections:
+        partial["head_to_head"] = ss.bench_head_to_head()
+    if "batched" in sections:
+        partial["batched"] = ss.bench_batched()
+    if "contention" in sections:
+        partial["contention"] = ss.bench_contention()
+    if "metro" in sections:
+        partial["metro"] = ss.bench_metro()
+    if packs:
+        partial["metro_scenarios"] = ss.bench_metro_scenarios(
+            packs=sorted(packs))
+    return partial
 
 
 def main(argv=None) -> int:
@@ -155,6 +241,11 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh", default=None,
                     help="compare an existing report instead of running "
                          "the benchmark (mainly for tests)")
+    ap.add_argument("--runs", type=int, default=1,
+                    help="measure failed WALL-CLOCK throughput floors up "
+                         "to this many times total and gate on the best "
+                         "observation (host-throttling flake armor); "
+                         "invariant/quality floors stay single-shot")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -172,6 +263,22 @@ def main(argv=None) -> int:
         print(f"fresh report: {out}")
 
     problems = compare(committed, fresh, tolerance=args.tolerance)
+    best: dict = {}
+    for attempt in range(2, max(1, args.runs) + 1):
+        failed_wall = sorted({p.split(":", 1)[0] for p in problems
+                              if _is_wall_clock(p.split(":", 1)[0])})
+        if not failed_wall or args.fresh:
+            break            # nothing rerunnable (or no benchmark to run)
+        print(f"re-measuring {len(failed_wall)} wall-clock floor(s), "
+              f"run {attempt}/{args.runs}: {', '.join(failed_wall)}")
+        partial = _remeasure(failed_wall)
+        for fn in _METRIC_FNS:
+            for key, val in fn(partial).items():
+                if key in failed_wall and val > best.get(key, 0.0):
+                    best[key] = val
+        problems = compare(committed, fresh, tolerance=args.tolerance,
+                           best=best)
+
     if problems:
         print("PERF REGRESSION vs committed baseline:")
         for p in problems:

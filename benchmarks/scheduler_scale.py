@@ -263,6 +263,62 @@ def bench_metro(wards=4, hours=2.0, seed=0):
     }
 
 
+CHAOS_PACKS = ("edge_brownout", "mass_casualty_crash",
+               "degraded_network", "diurnal_day")
+
+
+def _ratio(base, other, completions):
+    """miss-rate improvement `base/other` with bench_metro's semantics:
+    None (vacuous) when the baseline is already perfect, the divisor
+    floored at half a missed job so a perfect run can't demand a
+    near-infinite ratio forever after."""
+    return None if base == 0 else \
+        base / max(other, 0.5 / max(completions, 1))
+
+
+def bench_metro_scenarios(packs=CHAOS_PACKS, seed=0):
+    """Chaos scenario packs (DESIGN.md §11): every registered pack
+    replayed at its canonical shape under greedy, tabu-replan and the
+    shedding wrapper on identical traces/failures/network windows.
+
+    Guarded per pack: engine throughput (events/s, tabu), the
+    tabu-vs-greedy miss-rate improvement, and the shed policy's
+    life-critical miss-rate improvement vs greedy (the admission-control
+    claim: sacrificing a bounded share of the lowest-weight class must
+    protect the life-critical SLA). The search backend is pinned to the
+    Python path so the committed numbers are call-order-independent
+    (metro.engine's determinism note)."""
+    from repro.launch.serve import run_metro
+
+    out = {}
+    for pack in packs:
+        res = run_metro(seed=seed, scenario=pack,
+                        policies=("greedy", "tabu", "shed"),
+                        verbose=False, jax_threshold=10 ** 9)
+        g, t, sh = res["greedy"], res["tabu"], res["shed"]
+        out[pack] = {
+            "seed": seed,
+            "jobs": g["completions"] + g["shed"],
+            "events_per_s": t["events_per_s"],
+            "miss_rate_greedy": g["miss_rate"],
+            "miss_rate_tabu": t["miss_rate"],
+            "miss_rate_shed": sh["miss_rate"],
+            "miss_rate_improvement": _ratio(
+                g["miss_rate"], t["miss_rate"], g["completions"]),
+            "critical_miss_greedy": g["critical_miss_rate"],
+            "critical_miss_shed": sh["critical_miss_rate"],
+            "critical_improvement_shed": _ratio(
+                g["critical_miss_rate"], sh["critical_miss_rate"],
+                g["completions"]),
+            "shed_rate_shed": sh["shed_rate"],
+            "retries_tabu": t["retries"],
+            "wasted_machine_seconds_tabu": t["wasted_machine_seconds"],
+            "max_attempts_tabu": t["max_attempts"],
+            "event_log_hash_tabu": t["event_log_hash"],
+        }
+    return out
+
+
 def bench_online_fleet(seeds=3, wards=4, n=10, cloud_machines=2,
                        edge_machines=2):
     """Online fleet replanning vs the clairvoyant fixed point
@@ -419,6 +475,25 @@ def bench_scheduler_scale(with_online_scenarios: bool = False,
         f"miss_fleet={m['miss_rate_fleet']:.3f};"
         f"improvement={'vacuous' if imp is None else f'{imp:.2f}x'};"
         f"events_per_s={m['events_per_s']:.0f}")
+
+    # 5d) chaos scenario packs: crash/shed/degraded-network regimes
+    # (DESIGN.md §11)
+    report["metro_scenarios"] = bench_metro_scenarios()
+    for pack, ms in report["metro_scenarios"].items():
+        rows.append((f"metro_{pack}", ms["jobs"], 0.0,
+                     ms["events_per_s"]))
+        mi, ci = ms["miss_rate_improvement"], \
+            ms["critical_improvement_shed"]
+        csv.append(
+            f"sched_metro_{pack},0,"
+            f"jobs={ms['jobs']};"
+            f"miss_greedy={ms['miss_rate_greedy']:.3f};"
+            f"miss_tabu={ms['miss_rate_tabu']:.3f};"
+            f"improvement={'vacuous' if mi is None else f'{mi:.2f}x'};"
+            f"crit_shed={'vacuous' if ci is None else f'{ci:.2f}x'};"
+            f"shed_rate={ms['shed_rate_shed']:.3f};"
+            f"retries={ms['retries_tabu']};"
+            f"events_per_s={ms['events_per_s']:.0f}")
 
     # 6) per-scenario online competitive ratios (slower; gated by --online)
     if with_online_scenarios:

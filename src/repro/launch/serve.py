@@ -243,59 +243,93 @@ def run_wards(wards=4, patients=10, horizon=30.0, seed=0,
     return schedules, seconds
 
 
-def run_metro(wards=4, hours=2.0, seed=0, cloud_machines=2,
+def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
               edge_machines=2, policies=("greedy", "tabu", "fleet"),
-              verbose=True, jax_threshold=None):
-    """Metro traffic mode (DESIGN.md §10): hours of streaming
-    patient-episode traffic over `wards` wards sharing one metropolitan
-    cloud, replayed under each policy on identical traces, failures and
-    elastic-capacity events. Prints the policy comparison (p50/p99
-    response, SLA deadline miss-rate overall and per workload class,
-    per-tier utilisation, engine events/s) and returns
+              verbose=True, jax_threshold=None, scenario="default",
+              check_determinism=False):
+    """Metro traffic mode (DESIGN.md §10-§11): streaming patient-episode
+    traffic over a ward fleet sharing one metropolitan cloud, replayed
+    under each policy on identical traces, failures (drain or crash),
+    degraded-network windows and elastic-capacity events. `scenario`
+    names a chaos pack from `metro.traces.SCENARIO_PACKS`; `wards` and
+    `hours` default to the pack's canonical shape. Prints the policy
+    comparison (p50/p99 response, SLA miss-rate overall / life-critical
+    / shed, per-tier utilisation, engine events/s) and returns
     {policy: summary dict}.
+
+    check_determinism=True replays every policy twice on a fresh engine
+    and raises unless the event logs hash identically — the seeded-chaos
+    determinism contract (DESIGN.md §11). The search backend is pinned
+    to the Python path when no jax_threshold is given, because the
+    compiled-shape cache is call-order-dependent across runs in one
+    process (see metro.engine's determinism note).
 
     One trace time unit reads as one minute; episodes are the paper's
     three-app cascade with per-class response deadlines
     (metro.traces.EPISODE_STAGES). Unlike the finite single-shot modes
     above, nothing here is scored once — schedules are committed event
-    by event against machine failures and scale events, which is the
-    regime the ROADMAP's sustained-load north star asks for."""
+    by event against the chaos timeline, which is the regime the
+    ROADMAP's sustained-load north star asks for."""
     from repro.metro import make_policy, simulate_metro, traces
 
-    horizon = hours * 60.0
-    tr, fails, scales = traces.default_scenario(seed, wards, horizon)
+    if check_determinism and jax_threshold is None:
+        jax_threshold = 10 ** 9          # always the Python search path
+    horizon = None if hours is None else hours * 60.0
+    sc = traces.make_scenario(scenario, seed, wards=wards, horizon=horizon)
+    wards = len(sc.traces)
     mpt = {CC: cloud_machines, ES: edge_machines}
     # fleet's joint fixed point gets small per-event budgets: each event
     # only needs local repair on top of the previous one (DESIGN.md §10).
     # jax_threshold pins the search backend of the replanning policies
-    # (greedy never searches) — pass it for call-order-independent runs
-    # (see metro.engine's determinism note).
+    # (greedy/shed never search) — pass it for call-order-independent
+    # runs (see metro.engine's determinism note).
     kwargs = {"fleet": dict(max_count=2, max_sweeps=1,
                             jax_threshold=jax_threshold),
               "tabu": dict(jax_threshold=jax_threshold)}
+
+    def one_run(name):
+        # a fresh policy per run: policies may carry stream state (the
+        # shedding wrapper's running max weight)
+        return simulate_metro(
+            sc.traces, make_policy(name, **kwargs.get(name, {})),
+            machines_per_tier=mpt, failures=sc.failures,
+            scale_events=sc.scales, network_events=sc.network)
+
     if verbose:
-        n_jobs = sum(len(t) for t in tr)
-        print(f"metro: {wards} wards x {hours:.1f}h, {n_jobs} episode-stage "
-              f"jobs, {len(fails)} cloud failures, {len(scales)} scale "
-              f"events, fleet {cloud_machines}c/{edge_machines}e per ward")
+        kills = sum(f.kill_running for f in sc.failures)
+        print(f"metro[{sc.name}]: {wards} wards, {sc.jobs} episode-stage "
+              f"jobs, {len(sc.failures)} failures ({kills} crash), "
+              f"{len(sc.scales)} scale events, {len(sc.network)} network "
+              f"windows, fleet {cloud_machines}c/{edge_machines}e per ward")
         print(f"{'policy':8s} {'p50':>6s} {'p95':>6s} {'p99':>6s} "
-              f"{'miss%':>6s} {'threat%':>8s} {'cloud':>6s} {'edge':>6s} "
-              f"{'events/s':>9s}")
+              f"{'miss%':>6s} {'crit%':>6s} {'shed%':>6s} {'retry':>5s} "
+              f"{'cloud':>6s} {'edge':>6s} {'events/s':>9s}")
     out = {}
     for name in policies:
-        res = simulate_metro(tr, make_policy(name, **kwargs.get(name, {})),
-                             machines_per_tier=mpt, failures=fails,
-                             scale_events=scales)
+        res = one_run(name)
+        log_hash = zlib.crc32(repr(res.event_log).encode())
+        if check_determinism:
+            rerun_hash = zlib.crc32(repr(one_run(name).event_log).encode())
+            if rerun_hash != log_hash:
+                raise AssertionError(
+                    f"metro[{sc.name}]/{name}: event log not "
+                    f"deterministic across reruns ({log_hash:#x} vs "
+                    f"{rerun_hash:#x})")
         s = res.summary()
+        s["event_log_hash"] = log_hash
         out[name] = s
         if verbose:
             util = s["utilization"]
-            threat = s["miss_by_class"].get("life-death-prediction", 0.0)
             print(f"{name:8s} {s['p50']:6.1f} {s['p95']:6.1f} "
-                  f"{s['p99']:6.1f} {s['miss_rate']:6.2%} {threat:8.2%} "
+                  f"{s['p99']:6.1f} {s['miss_rate']:6.2%} "
+                  f"{s['critical_miss_rate']:6.2%} {s['shed_rate']:6.2%} "
+                  f"{s['retries']:5d} "
                   f"{util.get('cloud', 0.0):6.1%} "
                   f"{util.get('edge', 0.0):6.1%} "
                   f"{s['events_per_s']:9.0f}")
+    if verbose and check_determinism:
+        print(f"determinism: {len(out)} policies x 2 runs, event logs "
+              f"bit-identical")
     if verbose and "greedy" in out and "tabu" in out:
         # same semantics as benchmarks.scheduler_scale.bench_metro: the
         # ratio is vacuous when greedy itself misses nothing, and a
@@ -341,18 +375,34 @@ def main():
                          "fleet with failures and elastic capacity, "
                          "compared across replanning policies "
                          "(DESIGN.md §10)")
-    ap.add_argument("--metro-hours", type=float, default=2.0,
-                    help="simulated hours of metro traffic (>= 2 for the "
-                         "full policy comparison)")
+    ap.add_argument("--metro-hours", type=float, default=None,
+                    help="simulated hours of metro traffic (default: the "
+                         "scenario pack's canonical horizon)")
+    ap.add_argument("--scenario", default="default",
+                    help="chaos scenario pack for --metro "
+                         "(metro.traces.SCENARIO_PACKS: default, "
+                         "edge_brownout, mass_casualty_crash, "
+                         "degraded_network, diurnal_day)")
+    ap.add_argument("--metro-policies", default="greedy,tabu,fleet",
+                    help="comma-separated policy list for --metro "
+                         "(greedy, tabu, fleet, shed)")
+    ap.add_argument("--check-determinism", action="store_true",
+                    help="with --metro: run every policy twice and fail "
+                         "unless the event logs are bit-identical "
+                         "(DESIGN.md §11)")
     args = ap.parse_args()
     if args.contention and args.wards <= 0:
         ap.error("--contention requires --wards N (N > 0)")
     if args.metro:
-        run_metro(wards=args.wards or 4, hours=args.metro_hours,
+        run_metro(wards=args.wards or None, hours=args.metro_hours,
                   seed=args.seed,
                   cloud_machines=args.cloud_machines or 2,
                   edge_machines=args.edge_machines or 2,
-                  jax_threshold=args.jax_threshold)
+                  policies=tuple(
+                      p for p in args.metro_policies.split(",") if p),
+                  jax_threshold=args.jax_threshold,
+                  scenario=args.scenario,
+                  check_determinism=args.check_determinism)
     elif args.wards > 0:
         run_wards(wards=args.wards, patients=args.patients,
                   horizon=args.horizon, seed=args.seed,

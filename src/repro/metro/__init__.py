@@ -5,26 +5,34 @@ Three layers over the core scheduling machinery:
 
   * `traces`   — patient-episode generators (correlated bursts of the
     paper's three ICU apps) with diurnal/surge-modulated Poisson
-    intensity per ward, per-workload-class SLA deadlines, and machine
-    failure / elastic-capacity event streams;
+    intensity per ward, per-workload-class SLA deadlines, machine
+    failure / elastic-capacity / degraded-network event streams, and
+    the seeded chaos scenario-pack registry (`make_scenario`);
   * `engine`   — a discrete-event loop over arrivals, completions,
-    failures/recoveries and scale events, maintaining the true fleet
-    occupancy (shared metropolitan cloud pool, per-ward edge pools,
-    private devices) and driving a pluggable `Policy`;
+    drain/crash failures, recoveries, scale and network events,
+    maintaining the true fleet occupancy (shared metropolitan cloud
+    pool, per-ward edge pools, private devices) and driving a pluggable
+    `Policy`; crash kills retry through the normal decision path and
+    SHED decisions drop jobs as explicit misses (DESIGN.md §11);
   * `policies` — greedy commit-on-arrival, tabu committed replanning
     (`online_schedule`-style, batched across wards at matching event
-    counts via `scheduler.search_batched`), and the contention-aware
-    fleet fixed point (`scheduler.search_fleet`);
+    counts via `scheduler.search_batched`), the contention-aware
+    fleet fixed point (`scheduler.search_fleet`), and the
+    saturation-aware shedding wrapper;
   * `metrics`  — streaming, windowed SLA metrics: p50/p95/p99 response,
-    deadline miss-rate per workload class, per-tier utilisation, all
-    O(1) memory over unbounded runs.
+    deadline miss-rate per workload class (shed jobs are explicit
+    misses), crash-retry/wasted-work counters, per-tier utilisation,
+    all O(1) memory over unbounded runs.
 """
 from repro.metro.engine import (FailureEvent, MetroEngine, MetroResult,
-                                ScaleEvent, simulate_metro)
+                                NetworkEvent, ScaleEvent, simulate_metro)
 from repro.metro.metrics import MetroMetrics
-from repro.metro.policies import (FleetPolicy, GreedyPolicy, Policy,
-                                  TabuPolicy, make_policy)
+from repro.metro.policies import (SHED, FleetPolicy, GreedyPolicy, Policy,
+                                  SheddingPolicy, TabuPolicy, make_policy)
+from repro.metro.traces import SCENARIO_PACKS, Scenario, make_scenario
 
-__all__ = ["FailureEvent", "MetroEngine", "MetroResult", "ScaleEvent",
-           "simulate_metro", "MetroMetrics", "FleetPolicy", "GreedyPolicy",
-           "Policy", "TabuPolicy", "make_policy"]
+__all__ = ["FailureEvent", "MetroEngine", "MetroResult", "NetworkEvent",
+           "ScaleEvent", "simulate_metro", "MetroMetrics", "SHED",
+           "FleetPolicy", "GreedyPolicy", "Policy", "SheddingPolicy",
+           "TabuPolicy", "make_policy", "SCENARIO_PACKS", "Scenario",
+           "make_scenario"]

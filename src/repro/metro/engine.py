@@ -17,11 +17,25 @@ as in `simulate_fleet`.
 Commitment semantics follow `online_schedule` (DESIGN.md §7): a job
 whose machine slot has begun (start <= now) is immutable (C2); every
 other commitment may be re-tiered by the policy and is re-timed by the
-replay. A machine failure therefore never drops a running job — the
+replay. A *drain* failure (the default) never drops a running job — the
 machine finishes it, then goes down for the repair duration, delaying
-its queue successors; with B = 1 wards, no failures and the tabu policy,
-the engine's event sequence IS `online_schedule(replan="tabu")` and the
-committed schedules match bit-for-bit (tests/test_metro.py).
+its queue successors. A *crash* failure (`kill_running=True`) kills the
+struck machine's in-flight job: its commitment is invalidated, the
+partial run's machine-seconds are recorded as wasted, and the job
+returns to the pending set to be re-dispatched through the normal
+decision path (retries count as fresh arrivals, so search policies may
+fail it over to another tier). Policies may also return the SHED
+sentinel for a movable job — the engine drops it with a ``shed`` event
+and scores it as an explicit deadline miss (DESIGN.md §11). With B = 1
+wards, no failures and the tabu policy, the engine's event sequence IS
+`online_schedule(replan="tabu")` and the committed schedules match
+bit-for-bit (tests/test_metro.py).
+
+Degraded-network windows (`NetworkEvent`) multiply a shared tier's
+transmission times while active: every decision made inside the window
+prices the degraded uplink (the §7 shifted specs carry scaled
+transmission for any tier the job would re-ship to), while data already
+in flight toward a committed tier keeps its committed arrival.
 
 Completion events are scheduled from commitment end times and validated
 lazily on pop (a replan that re-times a commitment simply strands the
@@ -38,30 +52,56 @@ from __future__ import annotations
 
 import heapq
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import online
 from repro.core.simulator import JobSpec, Schedule, ScheduledJob
 from repro.core.tiers import CC, ED, ES
 from repro.metro.metrics import MetroMetrics
-from repro.metro.policies import Policy, ReplanRequest
+from repro.metro.policies import SHED, Policy, ReplanRequest
 
 _INF = float("inf")
 # same-instant ordering: completions first (a machine freeing at t is
-# visible to a replan at t), then fleet events, then arrivals
-_P_COMPLETE, _P_FAIL, _P_SCALE, _P_RECOVER, _P_ARRIVE = 0, 1, 2, 3, 4
+# visible to a replan at t), then fleet/network events, then arrivals
+(_P_COMPLETE, _P_FAIL, _P_SCALE, _P_RECOVER, _P_NET,
+ _P_ARRIVE) = 0, 1, 2, 3, 4, 5
+# decisions a policy may return per movable job (validated centrally
+# in _decide — not ad hoc per commit branch)
+_DECISIONS = frozenset((CC, ES, ED, SHED))
 
 
 @dataclass(frozen=True)
 class FailureEvent:
     """A machine in `tier`'s pool (ward-local for edge, fleet-wide for
-    cloud) breaks at `time` for `duration`: the earliest-free machine is
-    struck, finishes any running job, then stays down until repaired."""
+    cloud) breaks at `time` for `duration`.
+
+    Drain mode (default): the earliest-free machine is struck, finishes
+    any running job, then stays down until repaired — nothing is lost.
+
+    Crash mode (``kill_running=True``): the BUSIEST (latest-free)
+    machine is struck and dies immediately; its in-flight job is LOST —
+    the partial run is wasted machine-seconds, the commitment is
+    invalidated and the job re-dispatches through the normal decision
+    path (DESIGN.md §11)."""
     time: float
     tier: str = CC
     ward: Optional[int] = None           # None = the shared cloud pool
     duration: float = 10.0
+    kill_running: bool = False
+
+
+@dataclass(frozen=True)
+class NetworkEvent:
+    """Degraded-network window: transmission times toward `tier` are
+    multiplied by `factor` during [time, time + duration). Overlapping
+    windows compound. Decisions made inside the window price the
+    degraded uplink; data already shipped toward a committed tier keeps
+    its committed arrival (the in-flight contract, DESIGN.md §11)."""
+    time: float
+    duration: float = 30.0
+    tier: str = CC
+    factor: float = 4.0
 
 
 @dataclass(frozen=True)
@@ -112,14 +152,27 @@ class _Pool:
         self.reserved: List[float] = [0.0] * machines
 
     def capacity_integral(self, t_end: float) -> float:
-        """Machine-seconds the pool could have run in [0, t_end]."""
+        """Machine-seconds the pool could have run in [0, t_end]. Outage
+        intervals may overlap (a crash can strike an already-down
+        machine), so they are union-merged before subtracting."""
         total = 0.0
         for s in self.slots:
             hi = min(s.retired_at if s.retired_at is not None else t_end,
                      t_end)
             span = max(0.0, hi - s.created)
-            for d0, d1 in s.outages:
-                span -= max(0.0, min(d1, hi) - max(d0, s.created))
+            clipped = sorted(
+                (max(d0, s.created), min(d1, hi))
+                for d0, d1 in s.outages if min(d1, hi) > max(d0, s.created))
+            m0 = m1 = None
+            for d0, d1 in clipped:
+                if m1 is None or d0 > m1:
+                    if m1 is not None:
+                        span -= m1 - m0
+                    m0, m1 = d0, d1
+                elif d1 > m1:
+                    m1 = d1
+            if m1 is not None:
+                span -= m1 - m0
             total += max(0.0, span)
         return total
 
@@ -157,6 +210,7 @@ class MetroEngine:
                  machines_per_tier: Mapping[str, int] | None = None,
                  failures: Sequence[FailureEvent] = (),
                  scale_events: Sequence[ScaleEvent] = (),
+                 network_events: Sequence[NetworkEvent] = (),
                  metrics: MetroMetrics | None = None):
         mpt = dict(machines_per_tier or {CC: 1, ES: 1})
         self.jobs: List[List[JobSpec]] = [list(t) for t in ward_traces]
@@ -171,6 +225,10 @@ class MetroEngine:
         self.finished: List[List[bool]] = [
             [False] * len(t) for t in self.jobs]
         self.pending: List[List[int]] = [[] for _ in range(self.B)]
+        # per-job dispatch-loss count (crash kills); attempts = kills + 1
+        self.kills: List[List[int]] = [[0] * len(t) for t in self.jobs]
+        # active degraded-network factors per shared tier
+        self._net: Dict[str, List[float]] = {}
         self.metrics = metrics or MetroMetrics()
         self.event_log: List[tuple] = []
         self._heap: List[tuple] = []
@@ -187,6 +245,15 @@ class MetroEngine:
         for ev in scale_events:
             self._pool(ev.tier, ev.ward)
             self._push(ev.time, _P_SCALE, ("scale", ev))
+        for ev in network_events:
+            if ev.tier not in (CC, ES):
+                raise ValueError(f"network events degrade a shared tier's "
+                                 f"uplink, got {ev.tier!r}")
+            if not (ev.factor > 0 and ev.duration > 0):
+                raise ValueError(f"network event needs factor > 0 and "
+                                 f"duration > 0, got {ev}")
+            self._push(ev.time, _P_NET, ("net", ev, True))
+            self._push(ev.time + ev.duration, _P_NET, ("net", ev, False))
 
     # ------------------------------------------------------------ plumbing
     def _push(self, t: float, prio: int, payload: tuple) -> None:
@@ -271,6 +338,32 @@ class MetroEngine:
             self._replay_pool(self.edges[b], now)
 
     # ------------------------------------------------------------ replans
+    def _net_factor(self, tier: str) -> float:
+        f = 1.0
+        for x in self._net.get(tier, ()):
+            f *= x
+        return f
+
+    def _shift_spec(self, job: JobSpec, commit: Optional[_Commit],
+                    now: float) -> JobSpec:
+        """`online._replan_spec` view, with active degraded-network
+        factors applied to any shared tier the job would RE-ship to.
+        The committed tier's remaining transmission stays untouched:
+        that data is already in flight under its committed arrival."""
+        spec = online._replan_spec(job, commit, now)
+        if not self._net:
+            return spec
+        keep = commit.machine if commit is not None \
+            and commit.machine in (CC, ES) else None
+        trans = dict(spec.trans)
+        changed = False
+        for t in (CC, ES):
+            f = self._net_factor(t)
+            if f != 1.0 and t != keep and trans.get(t, 0.0) > 0.0:
+                trans[t] = trans[t] * f
+                changed = True
+        return replace(spec, trans=trans) if changed else spec
+
     def _decide(self, wards: Sequence[int], now: float,
                 fresh: Mapping[int, Sequence[int]] = ()) -> None:
         fresh = dict(fresh or {})
@@ -283,17 +376,18 @@ class MetroEngine:
             for j, cm in enumerate(self.commits[c]):
                 if cm is not None and cm.machine == CC and cm.start > now:
                     cloud_queue.append(
-                        (c, online._replan_spec(self.jobs[c][j], cm, now)))
+                        (c, self._shift_spec(self.jobs[c][j], cm, now)))
         requests: List[ReplanRequest] = []
         for b in wards:
             movable = [i for i in self.pending[b]
-                       if self.commits[b][i] is None
-                       or self.commits[b][i].start > now]
+                       if not self.finished[b][i]
+                       and (self.commits[b][i] is None
+                            or self.commits[b][i].start > now)]
             self.pending[b] = movable
             if not movable:
                 continue
-            shifted = [online._replan_spec(self.jobs[b][i],
-                                           self.commits[b][i], now)
+            shifted = [self._shift_spec(self.jobs[b][i],
+                                        self.commits[b][i], now)
                        for i in movable]
             new = set(fresh.get(b, ()))
             requests.append(ReplanRequest(
@@ -318,10 +412,28 @@ class MetroEngine:
                     raise ValueError(
                         f"ward {req.ward}: {len(tiers)} tiers for "
                         f"{len(req.movable)} movable jobs")
+                bad = sorted(set(t for t in tiers if t not in _DECISIONS))
+                if bad:
+                    raise ValueError(
+                        f"ward {req.ward}: policy returned unknown "
+                        f"decisions {bad}; expected a tier in "
+                        f"{sorted(_DECISIONS - {SHED})} or {SHED!r}")
                 for pos, i in enumerate(req.movable):
-                    self._commit(req.ward, i, req.shifted[pos],
-                                 tiers[pos], now)
+                    if tiers[pos] == SHED:
+                        self._shed(req.ward, i, now)
+                    else:
+                        self._commit(req.ward, i, req.shifted[pos],
+                                     tiers[pos], now)
         self._replay(now, edge_wards=[req.ward for req in requests])
+
+    def _shed(self, b: int, i: int, now: float) -> None:
+        """Drop a movable job on a SHED decision: finished-missed with an
+        explicit `shed` event, never dispatched (DESIGN.md §11)."""
+        job = self.jobs[b][i]
+        self.finished[b][i] = True
+        self.commits[b][i] = None
+        self.metrics.record_shed(now, job.workload, job.weight)
+        self.event_log.append(("shed", now, b, i, job.name))
 
     def _commit(self, b: int, i: int, shifted: JobSpec, tier: str,
                 now: float) -> None:
@@ -336,11 +448,9 @@ class MetroEngine:
             self.commits[b][i] = _Commit(job, ED, arrival, arrival, end,
                                          slot=-1, planned_at=now)
             return
-        if tier not in (CC, ES):
-            raise ValueError(f"policy placed a job on unknown tier "
-                             f"{tier!r}")
-        # shared tiers: the replay assigns slot and times (start > now
-        # placeholder keeps it in the unstarted set)
+        # shared tiers (decision already validated in _decide): the replay
+        # assigns slot and times (start > now placeholder keeps it in the
+        # unstarted set)
         self.commits[b][i] = _Commit(job, tier, arrival, _INF, _INF,
                                      slot=-1, planned_at=now)
 
@@ -360,36 +470,67 @@ class MetroEngine:
         job = c.job
         response = end - job.release
         self.metrics.record(now, job.workload, response, job.deadline,
-                            c.machine, end - c.start)
+                            c.machine, end - c.start,
+                            attempts=self.kills[b][i] + 1,
+                            weight=job.weight)
         self.event_log.append(
             ("complete", now, b, i, c.machine, c.start, end, response,
-             int(response > job.deadline)))
+             int(response > job.deadline), self.kills[b][i] + 1))
 
-    def _strike(self, pool: _Pool, now: float) -> Optional[int]:
-        """Earliest-free non-retired machine (the one a failure or a
-        scale-down takes), or None when the pool has none left."""
+    def _strike(self, pool: _Pool, now: float,
+                latest: bool = False) -> Optional[int]:
+        """Non-retired machine a fleet event takes: the earliest-free one
+        for drains/scale-downs, the LATEST-free (busiest) one for crash
+        failures (`latest=True` — a crash that spared the idlest machine
+        would rarely kill anything). None when the pool has none left."""
         cand = [(f, k) for k, (f, s) in enumerate(
             zip(self._slot_frees(pool, now), pool.slots))
             if s.retired_at is None]
-        return min(cand)[1] if cand else None
+        if not cand:
+            return None
+        return (max(cand) if latest else min(cand))[1]
 
     def _on_fail(self, now: float, ev: FailureEvent) -> None:
         pool = self._pool(ev.tier, ev.ward)
-        k = self._strike(pool, now)
+        k = self._strike(pool, now, latest=ev.kill_running)
         ward_key = -1 if ev.ward is None else ev.ward
+        kill_flag = int(ev.kill_running)
         if k is None:                      # every machine already retired
             self.event_log.append(("fail", now, ev.tier, ward_key, -1,
-                                   now))
+                                   now, kill_flag))
             return
         slot = pool.slots[k]
-        base = max(self._slot_frees(pool, now)[k], now)
+        killed: List[Tuple[int, int]] = []
+        if ev.kill_running:
+            # crash: the machine dies NOW; its in-flight job is lost
+            base = now
+            killed = [(b, i) for b, i in self._pool_members(pool)
+                      if not self.finished[b][i]
+                      and self.commits[b][i].slot == k
+                      and self.commits[b][i].start <= now
+                      < self.commits[b][i].end]
+        else:
+            # drain: the machine finishes its running job first
+            base = max(self._slot_frees(pool, now)[k], now)
         down_until = base + ev.duration
         slot.down = max(slot.down, down_until)
         slot.outages.append((base, down_until))
         self.event_log.append(("fail", now, ev.tier, ward_key, k,
-                               down_until))
+                               down_until, kill_flag))
+        fresh: Dict[int, List[int]] = {}
+        for b, i in killed:
+            c = self.commits[b][i]
+            wasted = now - c.start
+            self.kills[b][i] += 1
+            self.metrics.record_kill(ev.tier, wasted)
+            self.event_log.append(("kill", now, b, i, ev.tier, k, wasted,
+                                   self.kills[b][i]))
+            self.commits[b][i] = None
+            if i not in self.pending[b]:
+                self.pending[b].append(i)
+            fresh.setdefault(b, []).append(i)
         self._push(down_until, _P_RECOVER, ("recover", ev.tier, ev.ward))
-        self._after_fleet_event(ev.tier, ev.ward, now)
+        self._after_fleet_event(ev.tier, ev.ward, now, fresh=fresh)
 
     def _on_recover(self, now: float, tier: str,
                     ward: Optional[int]) -> None:
@@ -421,18 +562,44 @@ class MetroEngine:
         self._after_fleet_event(ev.tier, ev.ward, now)
 
     def _after_fleet_event(self, tier: str, ward: Optional[int],
-                           now: float) -> None:
+                           now: float,
+                           fresh: Mapping[int, Sequence[int]] | None = None
+                           ) -> None:
         """Capacity changed: replanning policies revisit every affected
         ward (all of them for the shared cloud — the matching-event-count
-        batched replan); commit-and-hold policies just re-time."""
-        affected = list(range(self.B)) if tier == CC or self.policy.joint \
-            else [ward]
-        if self.policy.replans_on_fleet_events:
-            self._decide(affected, now)
-        elif tier == CC:
+        batched replan); commit-and-hold policies just re-time. Crash
+        kills pass `fresh` — those jobs lost their commitment and MUST be
+        re-decided (through the normal decision path, as fresh arrivals)
+        even by commit-and-hold policies. The replay runs first so the
+        reserved views price the post-event fleet; started-occupancy busy
+        views are replay-invariant, preserving the B=1 tabu parity."""
+        if tier == CC:
             self._replay(now, edge_wards=())
         else:
             self._replay(now, edge_wards=[ward], cloud=False)
+        fresh = dict(fresh or {})
+        if self.policy.replans_on_fleet_events:
+            affected = list(range(self.B)) \
+                if tier == CC or self.policy.joint else [ward]
+            self._decide(affected, now, fresh=fresh)
+        elif fresh:
+            self._decide(sorted(fresh), now, fresh=fresh)
+
+    def _on_net(self, now: float, ev: NetworkEvent, on: bool) -> None:
+        """A degraded-network window opens/closes: update the active
+        factor set, log, and let replanning policies re-price movable
+        jobs under the new uplink (commitments keep their arrivals —
+        nothing already shipped is re-timed)."""
+        factors = self._net.setdefault(ev.tier, [])
+        if on:
+            factors.append(ev.factor)
+        else:
+            factors.remove(ev.factor)
+            if not factors:
+                del self._net[ev.tier]
+        self.event_log.append(("net", now, ev.tier, ev.factor, int(on)))
+        if self.policy.replans_on_fleet_events:
+            self._decide(range(self.B), now)
 
     # ---------------------------------------------------------------- run
     def run(self) -> MetroResult:
@@ -454,6 +621,8 @@ class MetroEngine:
                 self._on_fail(t, payload[1])
             elif kind == "scale":
                 self._on_scale(t, payload[1])
+            elif kind == "net":
+                self._on_net(t, *payload[1:])
             else:
                 self._on_recover(t, *payload[1:])
         seconds = time.perf_counter() - t0
@@ -461,12 +630,15 @@ class MetroEngine:
         for b, flags in enumerate(self.finished):
             missing = [i for i, ok in enumerate(flags) if not ok]
             if missing:
-                raise ValueError(f"ward {b}: jobs never completed: "
-                                 f"{missing[:5]} (event bug)")
+                raise ValueError(f"ward {b}: jobs neither completed nor "
+                                 f"shed: {missing[:5]} (event bug)")
         wards = []
         for b in range(self.B):
+            # shed jobs have no commitment — the schedule holds only the
+            # jobs that actually ran
             entries = [ScheduledJob(c.job, c.machine, c.arrival, c.start,
-                                    c.end) for c in self.commits[b]]
+                                    c.end) for c in self.commits[b]
+                       if c is not None]
             wards.append(Schedule(
                 entries=entries,
                 weighted_sum=sum(e.job.weight * e.response
@@ -500,9 +672,11 @@ def simulate_metro(ward_traces: Sequence[Sequence[JobSpec]],
                    machines_per_tier: Mapping[str, int] | None = None,
                    failures: Sequence[FailureEvent] = (),
                    scale_events: Sequence[ScaleEvent] = (),
+                   network_events: Sequence[NetworkEvent] = (),
                    metrics: MetroMetrics | None = None) -> MetroResult:
     """Build-and-run convenience wrapper (one engine per policy run)."""
     return MetroEngine(ward_traces, policy,
                        machines_per_tier=machines_per_tier,
                        failures=failures, scale_events=scale_events,
+                       network_events=network_events,
                        metrics=metrics).run()

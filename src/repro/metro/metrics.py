@@ -4,8 +4,11 @@ Everything here is O(1) memory in the number of completions: response
 times land in fixed log-spaced histograms (quantiles are read back by
 bucket interpolation, so a p99 is accurate to one bucket width — ~5%
 relative with the default 256 buckets over [0.01, 1e5]), per-class
-deadline misses are counters, and "recent" statistics come from a ring
-of per-window histograms that folds closed windows into the totals.
+deadline misses / sheds / crash retries are counters, and "recent"
+statistics come from a ring of per-window histograms that folds closed
+windows into the totals. A SHED job counts as an explicit deadline
+miss (it never ran) and a crash kill accumulates the wasted
+machine-seconds of the lost partial run (DESIGN.md §11).
 Long runs therefore hold `bins + windows * bins` integers regardless of
 how many episodes stream through.
 
@@ -119,7 +122,15 @@ class MetroMetrics:
         self.total = StreamingQuantiles(*self._shape)
         self.completions = 0
         self.misses = 0
-        self.by_class: Dict[str, List[int]] = {}     # class -> [done, missed]
+        self.shed = 0                  # jobs dropped by SHED decisions
+        self.retries = 0               # crash kills (lost in-flight jobs)
+        self.wasted_seconds = 0.0      # machine-seconds lost to kills
+        self.max_attempts = 1          # worst dispatch count of any job
+        self.weighted_finished = 0.0   # sum of weight over completed + shed
+        self.weighted_missed = 0.0     # ... over missed + shed
+        # class -> [completed, missed, shed]
+        self.by_class: Dict[str, List[int]] = {}
+        self.class_weight: Dict[str, float] = {}     # class -> job weight
         self.busy_time: Dict[str, float] = {}        # tier -> sum of proc
         self.recent: Deque[_Window] = deque(maxlen=max(1, keep_windows))
         self._open: _Window | None = None
@@ -135,18 +146,28 @@ class MetroMetrics:
             self._open = _Window(start, self._shape)
 
     def record(self, now: float, wclass: str, response: float,
-               deadline: float, tier: str, proc: float) -> None:
-        """One job completion at sim time `now`."""
+               deadline: float, tier: str, proc: float, *,
+               attempts: int = 1, weight: float = 1.0) -> None:
+        """One job completion at sim time `now`. `attempts` counts
+        dispatches (1 = never crash-killed); `weight` feeds the
+        weighted miss-rate alongside the per-class counters."""
         self._roll(now)
         missed = response > deadline
         self.total.add(response)
         self.completions += 1
         self.busy_time[tier] = self.busy_time.get(tier, 0.0) + proc
-        row = self.by_class.setdefault(wclass or _UNCLASSED, [0, 0])
+        if attempts > self.max_attempts:
+            self.max_attempts = attempts
+        self.weighted_finished += weight
+        cls = wclass or _UNCLASSED
+        self.class_weight[cls] = max(self.class_weight.get(cls, weight),
+                                     weight)
+        row = self.by_class.setdefault(cls, [0, 0, 0])
         row[0] += 1
         if missed:
             row[1] += 1
             self.misses += 1
+            self.weighted_missed += weight
         w = self._open
         w.hist.add(response)
         w.completions += 1
@@ -154,14 +175,68 @@ class MetroMetrics:
         if now > self.last_time:
             self.last_time = now
 
+    def record_shed(self, now: float, wclass: str,
+                    weight: float = 1.0) -> None:
+        """One job dropped by a SHED decision: an explicit deadline
+        miss (no response sample — the job never ran)."""
+        self._roll(now)
+        self.shed += 1
+        self.weighted_finished += weight
+        self.weighted_missed += weight
+        cls = wclass or _UNCLASSED
+        self.class_weight[cls] = max(self.class_weight.get(cls, weight),
+                                     weight)
+        row = self.by_class.setdefault(cls, [0, 0, 0])
+        row[2] += 1
+        self._open.misses += 1
+        if now > self.last_time:
+            self.last_time = now
+
+    def record_kill(self, tier: str, wasted: float) -> None:
+        """A crash failure killed an in-flight job: `wasted` machine-
+        seconds of partial work on `tier` are lost and the job retries."""
+        self.retries += 1
+        self.wasted_seconds += wasted
+
     # ------------------------------------------------------------ reading
     @property
+    def finished(self) -> int:
+        """Jobs accounted for: completed + explicitly shed."""
+        return self.completions + self.shed
+
+    @property
     def miss_rate(self) -> float:
-        return self.misses / self.completions if self.completions else 0.0
+        """Deadline misses over all finished jobs; a shed job IS a miss."""
+        return (self.misses + self.shed) / self.finished \
+            if self.finished else 0.0
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed / self.finished if self.finished else 0.0
+
+    @property
+    def weighted_miss_rate(self) -> float:
+        return self.weighted_missed / self.weighted_finished \
+            if self.weighted_finished else 0.0
+
+    @property
+    def critical_miss_rate(self) -> float:
+        """Miss rate over the HEAVIEST weight class(es) only — the
+        life-critical SLA the shedding policy protects by sacrificing
+        lighter classes (DESIGN.md §11)."""
+        if not self.by_class:
+            return 0.0
+        w_max = max(self.class_weight.values())
+        done = miss = 0
+        for c, (d, m, s) in self.by_class.items():
+            if self.class_weight[c] >= w_max:
+                done += d + s
+                miss += m + s
+        return miss / done if done else 0.0
 
     def miss_rate_by_class(self) -> Dict[str, float]:
-        return {c: (m / d if d else 0.0)
-                for c, (d, m) in sorted(self.by_class.items())}
+        return {c: ((m + s) / (d + s) if d + s else 0.0)
+                for c, (d, m, s) in sorted(self.by_class.items())}
 
     def recent_quantile(self, q: float) -> float:
         """Quantile over the last `keep_windows` closed windows plus the
@@ -177,12 +252,19 @@ class MetroMetrics:
         """Flat report dict (serve's policy table / the metro benchmark)."""
         return {
             "completions": self.completions,
+            "shed": self.shed,
+            "shed_rate": self.shed_rate,
+            "retries": self.retries,
+            "wasted_machine_seconds": self.wasted_seconds,
+            "max_attempts": self.max_attempts,
             "p50": self.total.quantile(0.50),
             "p95": self.total.quantile(0.95),
             "p99": self.total.quantile(0.99),
             "mean_response": self.total.mean,
             "max_response": self.total.max,
             "miss_rate": self.miss_rate,
+            "weighted_miss_rate": self.weighted_miss_rate,
+            "critical_miss_rate": self.critical_miss_rate,
             "miss_by_class": self.miss_rate_by_class(),
             "busy_time": dict(sorted(self.busy_time.items())),
             "utilization": dict(sorted((utilization or {}).items())),

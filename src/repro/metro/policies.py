@@ -8,7 +8,14 @@ shifted-spec form `online_schedule` replans (release moved to `now`,
 remaining transmission on the committed tier), so search-based policies
 optimise exactly the committed problem (DESIGN.md §7).
 
-Three built-ins:
+A decision is a tier name (cloud/edge/device) or the `SHED` sentinel:
+a shed job is dropped — the engine marks it finished-missed with a
+``shed`` event instead of ever running it (DESIGN.md §11). Shedding is
+the admission-control escape valve for saturation: a job that cannot
+meet any deadline anyway is cheaper missed *explicitly* than queued in
+front of jobs that still can.
+
+Four built-ins:
 
   * `GreedyPolicy` — commit-on-arrival with the paper's greedy rule
     against the RESERVED fleet view (queued commitments hold their
@@ -22,15 +29,23 @@ Three built-ins:
   * `FleetPolicy` — the contention-aware fixed point: every decision
     event replans ALL wards jointly via `scheduler.search_fleet`, so
     no two wards ever double-book the shared metropolitan cloud.
+  * `SheddingPolicy` — a wrapper that delegates tier choice to any
+    inner policy, then sheds lowest-weight-class movable jobs whose
+    reserved backlog exceeds a deadline-derived horizon.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import math
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence
 
 from repro.core import scheduler
 from repro.core.simulator import JobSpec
 from repro.core.tiers import CC, ED, ES
+
+# sentinel decision: drop the job instead of placing it on a tier (the
+# engine validates decisions against tiers + SHED in one place)
+SHED = "shed"
 
 
 @dataclass
@@ -44,9 +59,9 @@ class ReplanRequest:
     busy: Dict[str, List[float]]        # started-occupancy per shared tier
     reserved: Dict[str, List[float]]    # per-machine frees incl. queued jobs
     machines_per_tier: Dict[str, int]
-    background: List[JobSpec] = None    # OTHER wards' unstarted cloud
-                                        # commitments (shifted), queue-active
-                                        # but immovable for this ward
+    # OTHER wards' unstarted cloud commitments (shifted), queue-active
+    # but immovable for this ward
+    background: List[JobSpec] = field(default_factory=list)
 
 
 class Policy(Protocol):
@@ -60,7 +75,9 @@ class Policy(Protocol):
 
     def decide(self, requests: Sequence[ReplanRequest], now: float
                ) -> List[List[str]]:
-        """One tier list per request, aligned with its `movable`."""
+        """One decision list per request, aligned with its `movable`:
+        each entry a tier name or `SHED` (drop the job, scored as an
+        explicit deadline miss)."""
         ...                                               # pragma: no cover
 
 
@@ -187,11 +204,65 @@ class FleetPolicy:
         return [list(a) for a in plan.assignments]
 
 
+@dataclass
+class SheddingPolicy:
+    """Saturation-aware load shedding on top of any inner policy
+    (DESIGN.md §11): tier choice is delegated to `inner`, then a
+    movable job of the ward's LOWEST weight class is shed when the
+    reserved backlog of the shared tier it was placed on exceeds a
+    deadline-derived horizon — the earliest machine there frees more
+    than ``shed_factor * deadline`` away, so queueing the job burns
+    saturated capacity better spent on tighter-deadline classes.
+    Only jobs strictly BELOW the heaviest weight seen so far are ever
+    shed (never a life-critical class, never device placements): under
+    mass-casualty saturation the policy chooses WHICH deadline to miss
+    instead of letting overflowing queues miss the life-critical ones."""
+    inner: Optional[Policy] = None              # default: GreedyPolicy
+    shed_factor: float = 0.3
+    name: str = "shed"
+
+    def __post_init__(self):
+        if self.inner is None:
+            self.inner = GreedyPolicy()
+        self._max_weight = float("-inf")
+
+    @property
+    def joint(self) -> bool:
+        return self.inner.joint
+
+    @property
+    def replans_on_fleet_events(self) -> bool:
+        return self.inner.replans_on_fleet_events
+
+    def decide(self, requests, now):
+        decisions = self.inner.decide(requests, now)
+        for req in requests:
+            for job in req.shifted:
+                if job.weight > self._max_weight:
+                    self._max_weight = job.weight
+        for req, tiers in zip(requests, decisions):
+            for pos, job in enumerate(req.shifted):
+                tier = tiers[pos]
+                if tier not in (CC, ES) or \
+                        job.weight >= self._max_weight or \
+                        not math.isfinite(job.deadline):
+                    continue
+                vec = req.reserved.get(tier)
+                if not vec:
+                    continue
+                # how far away the earliest free machine of the placed
+                # tier is with every queued commitment dispatched
+                backlog = min(vec) - now
+                if backlog > self.shed_factor * job.deadline:
+                    tiers[pos] = SHED
+        return decisions
+
+
 def make_policy(name: str, **kw) -> Policy:
     """Factory keyed by the names serve/benchmarks print."""
     try:
         cls = {"greedy": GreedyPolicy, "tabu": TabuPolicy,
-               "fleet": FleetPolicy}[name]
+               "fleet": FleetPolicy, "shed": SheddingPolicy}[name]
     except KeyError:
         raise ValueError(f"unknown metro policy {name!r}") from None
     return cls(**kw)

@@ -14,22 +14,26 @@ is tiny (paper Table IV: 7.5k FLOPs), the phenotype classifier heavy
 (347k). Deadlines are per-workload-class response budgets carried on
 `JobSpec.deadline`; one trace time unit reads as one minute.
 
-Also provides the fleet-event streams the engine consumes: Poisson
-machine failures with repair times, and surge-following elastic scale
-events.
+Also provides the fleet-event streams the engine consumes — Poisson
+machine failures (drain or crash mode) with repair times, degraded-
+network windows, surge-following elastic scale events — and the seeded
+chaos scenario-pack registry (`SCENARIO_PACKS` / `make_scenario`): named
+(traces, failures, scales, network) bundles that serve, the benchmarks
+and the per-scenario regression floors all share, so a pack name plus a
+seed pins one bit-identical chaos run (DESIGN.md §11).
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.problems import metro_costs
 from repro.core.simulator import JobSpec
-from repro.core.tiers import CC
-from repro.metro.engine import FailureEvent, ScaleEvent
+from repro.core.tiers import CC, ES
+from repro.metro.engine import FailureEvent, NetworkEvent, ScaleEvent
 
 DAY = 1440.0                      # minutes
 
@@ -135,19 +139,43 @@ def metro_traces(rng: np.random.Generator, wards: int, horizon: float,
 def failure_events(rng: np.random.Generator, horizon: float, *,
                    tier: str = CC, ward: int | None = None,
                    mtbf: float = 60.0,
-                   mttr: Tuple[float, float] = (8.0, 20.0)
+                   mttr: Tuple[float, float] = (8.0, 20.0),
+                   kill_running: bool = False,
+                   window: Tuple[float, float] | None = None
                    ) -> List[FailureEvent]:
     """Poisson machine failures on one pool: exponential inter-failure
     times (`mtbf`), uniform repair durations (`mttr`). Cloud failures
     (ward=None) hit the shared pool and so replan every ward at one
-    event count — the batched-replan trigger (DESIGN.md §10)."""
-    out, t = [], 0.0
+    event count — the batched-replan trigger (DESIGN.md §10).
+    `kill_running=True` makes them crashes (in-flight job lost and
+    retried, DESIGN.md §11); `window=(t0, t1)` confines the process to
+    one chaos window instead of the whole [0, horizon)."""
+    lo, hi = window if window is not None else (0.0, horizon)
+    out, t = [], lo
     while True:
         t += float(rng.exponential(mtbf))
-        if t >= horizon:
+        if t >= hi:
             return out
         out.append(FailureEvent(time=t, tier=tier, ward=ward,
-                                duration=float(rng.uniform(*mttr))))
+                                duration=float(rng.uniform(*mttr)),
+                                kill_running=kill_running))
+
+
+def network_events(rng: np.random.Generator, horizon: float, *,
+                   tier: str = CC, windows: int = 2,
+                   duration: Tuple[float, float] = (10.0, 25.0),
+                   factor: Tuple[float, float] = (2.0, 5.0)
+                   ) -> List[NetworkEvent]:
+    """`windows` degraded-uplink windows on one shared tier: starts
+    uniform over the horizon (sorted), durations and slowdown factors
+    uniform over their ranges. Windows may overlap — the engine
+    compounds their factors."""
+    starts = sorted(float(rng.uniform(0.0, 0.85 * horizon))
+                    for _ in range(windows))
+    return [NetworkEvent(time=t, tier=tier,
+                         duration=float(rng.uniform(*duration)),
+                         factor=float(rng.uniform(*factor)))
+            for t in starts]
 
 
 def default_scenario(seed: int, wards: int = 4, horizon: float = 120.0, *,
@@ -183,3 +211,113 @@ def surge_scale_events(surges: Sequence[Tuple[float, float, float]], *,
         out.append(ScaleEvent(time=t1, tier=tier, ward=None,
                               delta=-machines))
     return out
+
+
+# --------------------------------------------------------- scenario packs
+@dataclass(frozen=True)
+class Scenario:
+    """One named chaos scenario: everything a MetroEngine run consumes,
+    a pure function of (pack name, seed, wards, horizon)."""
+    name: str
+    traces: List[List[JobSpec]]
+    failures: List[FailureEvent] = field(default_factory=list)
+    scales: List[ScaleEvent] = field(default_factory=list)
+    network: List[NetworkEvent] = field(default_factory=list)
+
+    @property
+    def jobs(self) -> int:
+        return sum(len(t) for t in self.traces)
+
+
+def _pack_default(seed: int, wards: int, horizon: float) -> Scenario:
+    tr, fails, scales = default_scenario(seed, wards, horizon)
+    return Scenario("default", tr, fails, scales)
+
+
+def _pack_edge_brownout(seed: int, wards: int, horizon: float) -> Scenario:
+    """Every ward's edge pool takes CRASH failures through a mid-run
+    brownout window at a heavy base rate: in-flight edge inference is
+    lost and must retry — usually failing over to the (healthy) shared
+    cloud."""
+    tr = metro_traces(np.random.default_rng(seed), wards, horizon,
+                      base_rate=0.3)
+    fails: List[FailureEvent] = []
+    for b in range(wards):
+        fails += failure_events(
+            np.random.default_rng(seed + 101 + b), horizon,
+            tier=ES, ward=b, mtbf=0.2 * horizon, mttr=(6.0, 15.0),
+            kill_running=True, window=(0.3 * horizon, 0.7 * horizon))
+    fails.sort(key=lambda e: e.time)
+    return Scenario("edge_brownout", tr, fails)
+
+
+def _pack_mass_casualty_crash(seed: int, wards: int,
+                              horizon: float) -> Scenario:
+    """A mass-casualty surge (4x arrivals) colliding with crash failures
+    on the shared cloud pool inside the surge window, while elastic
+    capacity tracks the surge — the saturation regime load shedding is
+    built for."""
+    surges = ((0.35 * horizon, 0.7 * horizon, 4.0),)
+    tr = metro_traces(np.random.default_rng(seed), wards, horizon,
+                      base_rate=0.12, surges=surges)
+    fails = failure_events(
+        np.random.default_rng(seed + 1), horizon,
+        mtbf=0.15 * horizon, mttr=(8.0, 18.0), kill_running=True,
+        window=surges[0][:2])
+    return Scenario("mass_casualty_crash", tr, fails,
+                    scales=surge_scale_events(surges))
+
+
+def _pack_degraded_network(seed: int, wards: int,
+                           horizon: float) -> Scenario:
+    """Cloud uplink degradation windows (transmission times scaled 2-5x)
+    plus sparse drain failures at a heavy base rate: replans made inside
+    a window must price the slow uplink and keep work at the edge."""
+    tr = metro_traces(np.random.default_rng(seed), wards, horizon,
+                      base_rate=0.3)
+    fails = failure_events(np.random.default_rng(seed + 1), horizon,
+                           mtbf=horizon, mttr=(8.0, 15.0))
+    net = network_events(np.random.default_rng(seed + 2), horizon,
+                         windows=2, duration=(0.1 * horizon,
+                                              0.25 * horizon),
+                         factor=(2.0, 5.0))
+    return Scenario("degraded_network", tr, fails, network=net)
+
+
+def _pack_diurnal_day(seed: int, wards: int, horizon: float) -> Scenario:
+    """A full simulated day at low base rate with a strong diurnal swing
+    and occasional drain failures — the long-haul streaming-metrics
+    regime (windowed quantiles actually roll)."""
+    tr = metro_traces(np.random.default_rng(seed), wards, horizon,
+                      base_rate=0.035, diurnal_amp=0.8)
+    fails = failure_events(np.random.default_rng(seed + 1), horizon,
+                           mtbf=360.0, mttr=(10.0, 30.0))
+    return Scenario("diurnal_day", tr, fails)
+
+
+# name -> (builder, default wards, default horizon in trace minutes)
+SCENARIO_PACKS: Dict[str, Tuple[
+    Callable[[int, int, float], Scenario], int, float]] = {
+    "default": (_pack_default, 4, 120.0),
+    "edge_brownout": (_pack_edge_brownout, 4, 90.0),
+    "mass_casualty_crash": (_pack_mass_casualty_crash, 4, 90.0),
+    "degraded_network": (_pack_degraded_network, 4, 90.0),
+    "diurnal_day": (_pack_diurnal_day, 2, DAY),
+}
+
+
+def make_scenario(name: str, seed: int = 0, *,
+                  wards: Optional[int] = None,
+                  horizon: Optional[float] = None) -> Scenario:
+    """Build a registered chaos pack. `wards`/`horizon` default to the
+    pack's canonical shape (the one the committed per-scenario floors
+    were measured on); overriding them is fine for smokes but produces
+    a different — still deterministic — run."""
+    try:
+        builder, d_wards, d_horizon = SCENARIO_PACKS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario pack {name!r}; registered: "
+            f"{sorted(SCENARIO_PACKS)}") from None
+    return builder(seed, wards if wards is not None else d_wards,
+                   horizon if horizon is not None else d_horizon)

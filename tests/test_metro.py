@@ -136,12 +136,14 @@ def _check_schedule_invariants(result, machines_per_tier, elastic=False):
     # the log's completions carry the committed, deadline-scored truth
     completes = [ev for ev in result.event_log if ev[0] == "complete"]
     assert len(completes) == sum(len(s.entries) for s in result.wards)
-    for _, t, b, i, tier, start, end, response, missed in completes:
+    for _, t, b, i, tier, start, end, response, missed, attempts \
+            in completes:
         e = result.wards[b].entries[i]
         assert (tier, start, end) == (e.machine, e.start, e.end)
         assert t == end and start <= end
         assert response == pytest.approx(end - e.job.release)
         assert missed == int(response > e.job.deadline)
+        assert attempts >= 1
 
 
 @pytest.mark.parametrize("policy", ["greedy", "tabu", "fleet"])
