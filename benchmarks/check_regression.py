@@ -27,6 +27,16 @@ hardware — regenerate the baseline when the CI host changes):
     does not, the benchmark no longer measures anything) and the fleet
     search must strictly beat the naive plans on the fleet-true
     objective;
+  * contention_interval ``improvement_vs_naive``, ``gap_closed``,
+    ``wards_per_s`` and ``fraction_of_batched`` — the §12
+    interval-reservation fleet path must hold both its absolute
+    throughput and its ratio to the independent §8 batched floor; plus
+    hard invariants whenever the fresh section exists:
+    ``parity_with_phantom`` must be True (the interval background must
+    reproduce the frozen-phantom plan bit-identically or strictly beat
+    it fleet-true) and the compiled-shape cache must report zero
+    evictions (the §12 bucketing contract keeps the benchmark inside a
+    handful of compiled shapes);
   * metro ``events_per_s`` and ``miss_rate_improvement`` — the streaming
     traffic engine must keep its event throughput and the tabu-vs-greedy
     deadline miss-rate win (DESIGN.md §10); plus the hard invariant that
@@ -61,7 +71,7 @@ import tempfile
 # metrics measured from wall-clock timings (rerunnable via --runs);
 # everything else is deterministic quality and stays single-shot
 _WALL_CLOCK_TOKENS = ("events_per_s", "wards_per_s", "speedup",
-                      "jax_vs_incremental")
+                      "jax_vs_incremental", "fraction_of_batched")
 
 
 def _is_wall_clock(key: str) -> bool:
@@ -103,6 +113,16 @@ def _contention_metrics(report: dict) -> dict:
     return out
 
 
+def _contention_interval_metrics(report: dict) -> dict:
+    c = report.get("contention_interval") or {}
+    out = {}
+    for key in ("improvement_vs_naive", "gap_closed", "wards_per_s",
+                "fraction_of_batched"):
+        if c.get(key):
+            out[f"contention_interval/{key}"] = c[key]
+    return out
+
+
 def _metro_metrics(report: dict) -> dict:
     m = report.get("metro") or {}
     out = {}
@@ -123,8 +143,8 @@ def _metro_scenario_metrics(report: dict) -> dict:
 
 
 _METRIC_FNS = (_head_to_head_metrics, _batched_metrics,
-               _contention_metrics, _metro_metrics,
-               _metro_scenario_metrics)
+               _contention_metrics, _contention_interval_metrics,
+               _metro_metrics, _metro_scenario_metrics)
 
 
 def compare(committed: dict, fresh: dict, tolerance: float = 0.30,
@@ -169,6 +189,22 @@ def compare(committed: dict, fresh: dict, tolerance: float = 0.30,
                 f"contention: fleet_true {cont.get('fleet_true')} does not "
                 f"strictly beat naive_fleet_true "
                 f"{cont.get('naive_fleet_true')}")
+    ci = fresh.get("contention_interval") or {}
+    if ci:
+        # hard invariants (DESIGN.md §12): the interval background must
+        # reproduce the frozen-phantom oracle's plan (or strictly beat
+        # it fleet-true), and the bucketed dispatch cache must absorb
+        # the benchmark's shape traffic without a single eviction
+        if not ci.get("parity_with_phantom", False):
+            problems.append(
+                "contention_interval/parity_with_phantom: False "
+                "(interval background diverged from the frozen-phantom "
+                "construction without beating it fleet-true)")
+        evs = (ci.get("compiled_shapes") or {}).get("evictions", 0)
+        if evs:
+            problems.append(
+                f"contention_interval/compiled_shapes.evictions: {evs} "
+                f"!= 0 (§12 bucketing no longer bounds shape churn)")
     metro = fresh.get("metro") or {}
     if metro:
         # hard invariant (DESIGN.md §10): committed tabu replanning must
@@ -224,6 +260,8 @@ def _remeasure(failed_keys) -> dict:
         partial["batched"] = ss.bench_batched()
     if "contention" in sections:
         partial["contention"] = ss.bench_contention()
+    if "contention_interval" in sections:
+        partial["contention_interval"] = ss.bench_contention_interval()
     if "metro" in sections:
         partial["metro"] = ss.bench_metro()
     if packs:

@@ -32,8 +32,8 @@ from dataclasses import dataclass, replace
 from typing import Dict, List, Mapping, Sequence
 
 from repro.core import scheduler
-from repro.core.simulator import (MACHINES, JobSpec, Schedule, ScheduledJob,
-                                  machine_free_times, simulate)
+from repro.core.simulator import (MACHINES, JobSpec, Reservation, Schedule,
+                                  ScheduledJob, machine_free_times, simulate)
 from repro.core.tiers import CC, ED, ES
 
 _SHARED = (CC, ES)
@@ -195,12 +195,14 @@ def online_schedule_fleet(ward_jobs: Sequence[Sequence[JobSpec]], *,
         running ANY ward's started cloud job (cross-ward, so no two wards
         can ever double-book a cloud server);
       * every other ward's committed-but-unstarted cloud job enters the
-        replan as a frozen background job — immovable (C2 belongs to its
-        own ward), but fully present in the merged FIFO queue, so ward b
-        pays the queueing delay it inflicts and vice versa;
-      * background jobs are re-timed (never re-decided) from the same
-        plan, so each commitment's recorded start/end stays consistent
-        with the merged queue as other wards' arrivals interleave.
+        replan as an interval RESERVATION (DESIGN.md §12) — immovable
+        (C2 belongs to its own ward), but fully present in the merged
+        FIFO queue, so ward b pays the queueing delay it inflicts and
+        vice versa;
+      * reservations are re-timed (never re-decided) from the plan's
+        ``reserved_times``, so each commitment's recorded start/end
+        stays consistent with the merged queue as other wards' arrivals
+        interleave.
 
     Per-ward edge pools and private devices replan exactly as the
     single-ward `online_schedule` (tabu mode). With B = 1 the background
@@ -242,11 +244,12 @@ def online_schedule_fleet(ward_jobs: Sequence[Sequence[JobSpec]], *,
         if bg:
             bg_specs = [_replan_spec(ward_jobs[c][j], commits[c][j], now)
                         for c, j in bg]
-            aug = shifted + bg_specs
+            resv = {CC: [Reservation(
+                arrival=s.release + s.trans.get(CC, 0.0), proc=s.proc[CC],
+                release=s.release, weight=s.weight) for s in bg_specs]}
             initial = [commits[b][j].machine if commits[b][j] is not None
-                       else ED for j in movable] + [CC] * len(bg)
-            frozen = [False] * len(movable) + [True] * len(bg)
-            plan = scheduler.search(aug, initial=initial, frozen=frozen,
+                       else ED for j in movable]
+            plan = scheduler.search(shifted, initial=initial, reserved=resv,
                                     max_count=max_count,
                                     jax_threshold=jax_threshold,
                                     machines_per_tier=mpt, busy_until=busy)
@@ -254,15 +257,16 @@ def online_schedule_fleet(ward_jobs: Sequence[Sequence[JobSpec]], *,
             plan = scheduler.search(shifted, max_count=max_count,
                                     jax_threshold=jax_threshold,
                                     machines_per_tier=mpt, busy_until=busy)
-        # ward b's movable jobs commit verbatim; background jobs RE-TIME
+        # ward b's movable jobs commit verbatim; reservations RE-TIME
         # (machine unchanged) so their commitments track the merged queue
         for entry, j in zip(plan.entries, movable):
             commits[b][j] = _Commit(ward_jobs[b][j], entry.machine,
                                     entry.arrival, entry.start, entry.end)
-        for entry, (c, j) in zip(plan.entries[len(movable):], bg):
-            cm = commits[c][j]
-            commits[c][j] = _Commit(cm.job, cm.machine, entry.arrival,
-                                    entry.start, entry.end)
+        if bg:
+            for (arr, start, end), (c, j) in zip(plan.reserved_times[CC],
+                                                 bg):
+                cm = commits[c][j]
+                commits[c][j] = _Commit(cm.job, cm.machine, arr, start, end)
         pending[b] = movable
 
     out = []

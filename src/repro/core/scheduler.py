@@ -31,9 +31,9 @@ import itertools
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, Sequence, Tuple
 
-from repro.core.simulator import (MACHINES, FleetSchedule, JobSpec, Schedule,
-                                  ScheduleState, _fleet_mpts,
-                                  machine_free_times, simulate,
+from repro.core.simulator import (MACHINES, FleetSchedule, JobSpec,
+                                  Reservation, Schedule, ScheduleState,
+                                  _fleet_mpts, machine_free_times, simulate,
                                   simulate_fleet)
 from repro.core.tiers import CC, ED, ES
 
@@ -44,7 +44,7 @@ JAX_SEARCH_THRESHOLD = 64
 # search (DESIGN.md §8); smaller ones loop the per-instance `search`
 BATCHED_SEARCH_MIN_WARDS = 4
 
-# (n, cloud machines, edge machines, objective) shapes the jitted solo
+# BUCKETED (rows, movable, fleet, objective) shapes the jitted solo
 # search has already compiled IN THIS PROCESS. On CPU the delta-evaluated
 # kernel beats the incremental Python path once compiled (DESIGN.md
 # §3.3), but a fresh XLA trace costs seconds — so `search` only
@@ -52,6 +52,17 @@ BATCHED_SEARCH_MIN_WARDS = 4
 # earlier call (benchmark warm-up, explicit jax_threshold, TPU run)
 # already paid the compile. Replanning loops with repeating shapes (the
 # metro engine) then ride the compiled kernel for free.
+#
+# The key buckets both the padded row count (jobs + reservations) and
+# the movable count up to multiples of 16 (DESIGN.md §12) — the same
+# padding the kernel itself applies — so metro load, where the movable
+# count drifts at every event, maps to a handful of compiled shapes
+# instead of one per event. The cache is CAPPED: a miss at the cap
+# clears it AND the underlying jit caches, so a pathological shape
+# churn degrades to retracing instead of unbounded compiled-program
+# growth. `compiled_shape_stats()` surfaces hit/miss/eviction counters
+# (recorded by benchmarks/scheduler_scale.py) so retrace regressions
+# under metro load are visible, not just slow.
 #
 # Note the trade this makes explicit: the two backends are both exact
 # C1-C5 searches but follow different trajectories (paired moves, §8),
@@ -62,6 +73,52 @@ BATCHED_SEARCH_MIN_WARDS = 4
 # an explicit jax_threshold. The committed benchmarks run each section
 # in a fixed order in a fresh process, so their numbers are stable.
 _COMPILED_SHAPES: set = set()
+_COMPILED_SHAPES_CAP = 64
+_SHAPE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def _bucket16(x: int) -> int:
+    """§12 bucketing contract: kernel sizes round up to multiples of 16
+    (minimum 16), matching scheduler_jax's movable-slot padding."""
+    return ((max(int(x), 1) + 15) // 16) * 16
+
+
+def _batched_shape(B, rows, n_mov, pairs, objective):
+    """Bucketed cache key for one BATCHED kernel dispatch. Tagged with a
+    leading "batched" so it can never satisfy the solo fast-path lookup
+    (a batched compile at B=32 does not warm the B=1 solo kernel)."""
+    return ("batched", B, rows, min(rows, _bucket16(n_mov)),
+            (max(c for c, _ in pairs), max(e for _, e in pairs)), objective)
+
+
+def compiled_shape_stats() -> Dict[str, int]:
+    """Dispatch cache counters: {size, hits, misses, evictions}, covering
+    solo fast-path dispatches and batched kernel calls alike.
+
+    A healthy metro run shows misses plateauing after warm-up while hits
+    keep climbing; rising misses (or any eviction) under steady load
+    means the bucketing no longer covers the traffic's shape churn."""
+    return {"size": len(_COMPILED_SHAPES), **_SHAPE_STATS}
+
+
+def _note_shape(shape) -> None:
+    """Record one JAX dispatch of `shape` — a solo fast-path key or a
+    `_batched_shape` key (hit or miss); on a miss
+    at the cap, drop every compiled shape — ours and jit's — rather than
+    let compiled programs accumulate without bound."""
+    if shape in _COMPILED_SHAPES:
+        _SHAPE_STATS["hits"] += 1
+        return
+    _SHAPE_STATS["misses"] += 1
+    if len(_COMPILED_SHAPES) >= _COMPILED_SHAPES_CAP:
+        _COMPILED_SHAPES.clear()
+        _SHAPE_STATS["evictions"] += 1
+        try:                                            # pragma: no cover
+            import jax
+            jax.clear_caches()
+        except Exception:
+            pass
+    _COMPILED_SHAPES.add(shape)
 
 
 # --------------------------------------------------------------- strategies
@@ -124,7 +181,9 @@ def neighborhood_search(jobs: Sequence[JobSpec],
                         machines_per_tier: Mapping[str, int] | None = None,
                         busy_until: Mapping[str, Sequence[float]] | None
                         = None,
-                        frozen: Sequence[bool] | None = None) -> Schedule:
+                        frozen: Sequence[bool] | None = None,
+                        reserved: Mapping[str, Sequence[Reservation]] | None
+                        = None) -> Schedule:
     """Paper Algorithm 2. objective: "weighted" (eq. 5) | "unweighted".
 
     Each candidate move is scored incrementally (only the two affected
@@ -139,14 +198,22 @@ def neighborhood_search(jobs: Sequence[JobSpec],
     frozen: jobs the search must never reassign (they still occupy their
     queues and count toward the objective — DESIGN.md §9 background jobs);
     requires an explicit ``initial`` carrying their pinned tiers.
+    reserved: {tier: [Reservation]} committed background occupancy merged
+    into the shared queues (DESIGN.md §12) — queue-active and scored like
+    frozen jobs, but never a move candidate, so a mostly-background
+    instance searches only its own jobs. Requires an explicit ``initial``
+    (the greedy initialiser ignores reservation occupancy).
     """
     if frozen is not None and any(frozen) and initial is None:
         raise ValueError("frozen jobs require an explicit initial "
                          "assignment carrying their pinned tiers")
+    if reserved and any(reserved.values()) and initial is None:
+        raise ValueError("reservations require an explicit initial "
+                         "assignment (greedy init ignores their occupancy)")
     assign = list(initial or greedy_schedule(
         jobs, machines_per_tier=machines_per_tier, busy_until=busy_until))
     state = ScheduleState(jobs, assign, machines_per_tier=machines_per_tier,
-                          busy_until=busy_until)
+                          busy_until=busy_until, reserved=reserved)
     best = state.score(objective)
     for _ in range(max_count):
         tabu_job = [bool(frozen[i]) if frozen is not None else False
@@ -230,7 +297,9 @@ def search(jobs: Sequence[JobSpec],
            jax_threshold: int | None = None,
            machines_per_tier: Mapping[str, int] | None = None,
            busy_until: Mapping[str, Sequence[float]] | None = None,
-           frozen: Sequence[bool] | None = None) -> Schedule:
+           frozen: Sequence[bool] | None = None,
+           reserved: Mapping[str, Sequence[Reservation]] | None = None
+           ) -> Schedule:
     """Size-dispatched Algorithm 2: the incremental Python tabu search for
     small instances, the fully jitted JAX neighbourhood search (one
     vmapped n x 3 neighbourhood evaluation per round inside lax.while_loop,
@@ -247,20 +316,29 @@ def search(jobs: Sequence[JobSpec],
     deployments); fleet planning over many wards should use
     `search_batched`, which amortises one compile across the batch.
 
-    machines_per_tier / busy_until (DESIGN.md §7) and frozen
-    (DESIGN.md §9: immovable background jobs, initial required) are
+    machines_per_tier / busy_until (DESIGN.md §7), frozen (DESIGN.md §9:
+    immovable background jobs, initial required) and reserved
+    (DESIGN.md §12: committed interval occupancy, initial required) are
     threaded through whichever backend runs, so both search the problem
     the schedule will actually be committed against.
 
-    Compiled-shape fast path: a CPU call whose (n, fleet, objective)
-    shape some earlier call already compiled (`_COMPILED_SHAPES`)
-    dispatches to JAX even below the threshold — the compile is sunk, and
-    once compiled the jitted search wins on CPU too (DESIGN.md §3.3).
+    Compiled-shape fast path: a CPU call whose BUCKETED (rows, movable,
+    fleet, objective) shape some earlier call already compiled
+    (`_COMPILED_SHAPES`) dispatches to JAX even below the threshold —
+    the compile is sunk, and once compiled the jitted search wins on CPU
+    too (DESIGN.md §3.3). The JAX call pads its instance to the bucketed
+    row count (§12), so every call whose sizes land in one bucket hits
+    ONE compiled kernel — under metro load the movable count drifts at
+    every event, and without the bucketing each drift would be a fresh
+    multi-second trace.
     """
     n = len(jobs)
     mpt = dict(machines_per_tier or {})
     mpt_jax = (int(mpt.get(CC, 1)), int(mpt.get(ES, 1)))
-    shape = (n, mpt_jax, objective)
+    n_res = sum(len(v) for v in (reserved or {}).values())
+    n_mov = n - (sum(map(bool, frozen)) if frozen is not None else 0)
+    rows = _bucket16(n + n_res)
+    shape = (rows, min(rows, _bucket16(n_mov)), mpt_jax, objective)
     if jax_threshold is None:
         use_jax = (n > JAX_SEARCH_THRESHOLD and _accelerator_backend()) \
             or shape in _COMPILED_SHAPES
@@ -270,24 +348,30 @@ def search(jobs: Sequence[JobSpec],
         return neighborhood_search(jobs, initial=initial,
                                    max_count=max_count, objective=objective,
                                    machines_per_tier=machines_per_tier,
-                                   busy_until=busy_until, frozen=frozen)
+                                   busy_until=busy_until, frozen=frozen,
+                                   reserved=reserved)
     from repro.core import scheduler_jax   # lazy: keep jax off small paths
     if frozen is not None and any(frozen) and initial is None:
         raise ValueError("frozen jobs require an explicit initial "
                          "assignment carrying their pinned tiers")
+    if n_res and initial is None:
+        raise ValueError("reservations require an explicit initial "
+                         "assignment (greedy init ignores their occupancy)")
     assign0 = initial or greedy_schedule(
         jobs, machines_per_tier=machines_per_tier, busy_until=busy_until)
     busy_jax = tuple(machine_free_times(busy_until, t, m)
                      for t, m in zip((CC, ES), mpt_jax))
-    _, best_a = scheduler_jax.tabu_search_jax(
-        jobs, initial=[MACHINES.index(t) for t in assign0],
-        max_rounds=max(max_count, 1) * len(jobs), objective=objective,
-        machines_per_tier=mpt_jax, busy_until=busy_jax,
-        frozen=None if frozen is None else list(frozen))
-    _COMPILED_SHAPES.add(shape)
-    return simulate(jobs, [MACHINES[int(m)] for m in best_a],
+    _, assigns = scheduler_jax.tabu_search_batched(
+        [jobs], [[MACHINES.index(t) for t in assign0]],
+        max_rounds=max(max_count, 1), objective=objective,
+        machines_per_tier=[mpt_jax], busy_until=[busy_jax],
+        frozen=None if frozen is None else [list(frozen)],
+        reserved=None if reserved is None else [reserved],
+        pad_to=rows)
+    _note_shape(shape)
+    return simulate(jobs, [MACHINES[int(m)] for m in assigns[0]],
                     machines_per_tier=machines_per_tier,
-                    busy_until=busy_until)
+                    busy_until=busy_until, reserved=reserved)
 
 
 def search_batched(problems: Sequence[Sequence[JobSpec]],
@@ -298,8 +382,8 @@ def search_batched(problems: Sequence[Sequence[JobSpec]],
                    min_batch: int | None = None,
                    jax_threshold: int | None = None,
                    initial: Sequence[Sequence[str]] | None = None,
-                   frozen: Sequence[Sequence[bool] | None] | None = None
-                   ) -> List[Schedule]:
+                   frozen: Sequence[Sequence[bool] | None] | None = None,
+                   reserved=None) -> List[Schedule]:
     """Plan B independent ward instances, one jitted device call
     (DESIGN.md §8) — the fleet-scale entry point used by
     `launch/serve.py --wards` and the batched clairvoyant baselines in
@@ -323,6 +407,11 @@ def search_batched(problems: Sequence[Sequence[JobSpec]],
     engine's multi-ward replans ride through here so one event's replans
     batch into one device call (DESIGN.md §10).
 
+    reserved (DESIGN.md §12): optional per-ward {tier: [Reservation]}
+    maps of committed interval occupancy, forwarded to whichever backend
+    runs; a ward with reservations needs an explicit initial. Returned
+    objectives include reservation contributions.
+
     Every returned Schedule is a final exact `simulate` of its ward's
     best assignment against that ward's own fleet, so reported numbers
     are the reference evaluator's bit-for-bit (§3.1 invariant)."""
@@ -333,18 +422,27 @@ def search_batched(problems: Sequence[Sequence[JobSpec]],
     busys = [None] * B if busy_until is None else list(busy_until)
     inits = [None] * B if initial is None else list(initial)
     frozens = [None] * B if frozen is None else list(frozen)
+    reserveds = [None] * B if reserved is None else list(reserved)
     if len(mpts) != B or len(busys) != B or len(inits) != B \
-            or len(frozens) != B:
+            or len(frozens) != B or len(reserveds) != B:
         raise ValueError(f"{len(mpts)} fleets / {len(busys)} busy vectors "
                          f"/ {len(inits)} initials / {len(frozens)} frozen "
-                         f"masks for {B} wards")
+                         f"masks / {len(reserveds)} reservation maps "
+                         f"for {B} wards")
+    bad = [i for i, (rv, init) in enumerate(zip(reserveds, inits))
+           if rv and any(rv.values()) and init is None]
+    if bad:
+        raise ValueError(f"reservations require an explicit initial "
+                         f"assignment (greedy init ignores their "
+                         f"occupancy); missing for wards {bad}")
     threshold = BATCHED_SEARCH_MIN_WARDS if min_batch is None else min_batch
     if B < threshold:
         return [search(jobs, max_count=max_count, objective=objective,
                        jax_threshold=jax_threshold, initial=init,
-                       frozen=fr, machines_per_tier=m, busy_until=b)
-                for jobs, m, b, init, fr
-                in zip(problems, mpts, busys, inits, frozens)]
+                       frozen=fr, reserved=rv, machines_per_tier=m,
+                       busy_until=b)
+                for jobs, m, b, init, fr, rv
+                in zip(problems, mpts, busys, inits, frozens, reserveds)]
     from repro.core import scheduler_jax   # lazy: keep jax off small paths
     if initial is None and frozen is not None \
             and any(fr is not None and any(fr) for fr in frozens):
@@ -362,18 +460,31 @@ def search_batched(problems: Sequence[Sequence[JobSpec]],
     busy_pairs = [tuple(machine_free_times(b, t, mm)
                         for t, mm in zip((CC, ES), pair))
                   for b, pair in zip(busys, pairs)]
-    n_max = max((len(jobs) for jobs in problems), default=0)
+    # bucket the padded row count (§12) so metro multi-ward replans with
+    # drifting sizes land on a handful of compiled shapes, and record the
+    # dispatch so `compiled_shape_stats` sees batched traffic too
+    raw_rows = max((len(jobs) + sum(len(v) for v in (rv or {}).values())
+                    for jobs, rv in zip(problems, reserveds)), default=0)
+    rows = _bucket16(raw_rows) if raw_rows else None
     _, assigns = scheduler_jax.tabu_search_batched(
         problems,
         None if initial is None else
         [[MACHINES.index(t) for t in init] for init in inits],
-        max_rounds=max(max_count, 1) * max(n_max, 1),
+        max_rounds=max(max_count, 1),
         objective=objective, machines_per_tier=pairs,
         busy_until=busy_pairs,
-        frozen=None if frozen is None else frozens)
+        frozen=None if frozen is None else frozens,
+        reserved=None if reserved is None else reserveds,
+        pad_to=rows)
+    if raw_rows:
+        n_mov = max(len(jobs) - (sum(map(bool, fr)) if fr is not None
+                                 else 0)
+                    for jobs, fr in zip(problems, frozens))
+        _note_shape(_batched_shape(B, rows, n_mov, pairs, objective))
     return [simulate(jobs, [MACHINES[int(i)] for i in a],
-                     machines_per_tier=m, busy_until=b)
-            for jobs, a, m, b in zip(problems, assigns, mpts, busys)]
+                     machines_per_tier=m, busy_until=b, reserved=rv)
+            for jobs, a, m, b, rv
+            in zip(problems, assigns, mpts, busys, reserveds)]
 
 
 # --------------------------------------------- contention-aware fleet search
@@ -413,6 +524,115 @@ class FleetPlan:
         return (naive - self.fleet.objective(self.objective)) / excess
 
 
+class _FleetEval:
+    """Fleet-true trial evaluator for the §9 acceptance loop — the same
+    C5 arithmetic as `simulate_fleet`, specialised to a FIXED fleet
+    (jobs, pools, busy vectors) with only the assignment varying.
+
+    `simulate_fleet` re-sorts every pool's merged queue and rebuilds
+    ScheduledJob objects on each call; with the interval kernel making
+    sweeps cheap, the acceptance loop's per-trial rescoring became the
+    §9 bottleneck. This evaluator pre-sorts each pool's full cross-ward
+    queue ONCE (filtering a sorted queue by the trial's assignment
+    preserves queue order), then replays the exact `_fifo_pool` heap
+    arithmetic per trial — same floats in the same accumulation order,
+    so values are bit-identical to
+    ``simulate_fleet(...).objective(objective)`` (pinned by
+    tests/test_intervals.py), and the monotone acceptance decisions are
+    exactly the ones the full evaluator would have made."""
+
+    def __init__(self, ward_jobs, mpts, busy_until, ward_busy_until,
+                 shared_tiers):
+        B = len(ward_jobs)
+        busys = [None] * B if ward_busy_until is None \
+            else list(ward_busy_until)
+        self._rel = [[j.release for j in jobs] for jobs in ward_jobs]
+        self._w = [[j.weight for j in jobs] for jobs in ward_jobs]
+        # the private tier never queues: precomputed ends, overwritten
+        # per trial wherever the assignment routes a job to a pool
+        self._ed = [[j.release + j.trans.get(ED, 0.0) + j.proc[ED]
+                     for j in jobs] for jobs in ward_jobs]
+        self._pools = []        # (tier, sorted records, initial frees)
+
+        def pool(tier, wards_, free0):
+            recs = sorted(
+                (ward_jobs[b][i].release + ward_jobs[b][i].trans[tier],
+                 ward_jobs[b][i].release, b, i,
+                 ward_jobs[b][i].proc[tier])
+                for b in wards_ for i in range(len(ward_jobs[b])))
+            self._pools.append((tier, recs, free0))
+
+        for tier in (CC, ES):
+            if tier in shared_tiers:
+                if B:
+                    pool(tier, range(B),
+                         machine_free_times(busy_until, tier,
+                                            mpts[0].get(tier, 1)))
+            else:
+                for b in range(B):
+                    pool(tier, (b,),
+                         machine_free_times(busys[b], tier,
+                                            mpts[b].get(tier, 1)))
+
+    def __call__(self, assignments, objective: str) -> float:
+        ends = [list(e) for e in self._ed]
+        for tier, recs, free0 in self._pools:
+            free = list(free0)
+            heapq.heapify(free)
+            for arr, _rel, b, i, proc in recs:
+                if assignments[b][i] != tier:
+                    continue
+                avail = heapq.heappop(free)
+                start = arr if arr > avail else avail
+                end = start + proc
+                heapq.heappush(free, end)
+                ends[b][i] = end
+        if objective == "last":
+            return max((max(e, default=0.0) for e in ends), default=0.0)
+        tot = 0.0
+        if objective == "weighted":
+            for rel, w, end in zip(self._rel, self._w, ends):
+                s = 0.0
+                for r, ww, e in zip(rel, w, end):
+                    s += ww * (e - r)
+                tot += s
+        else:
+            for rel, end in zip(self._rel, ends):
+                s = 0.0
+                for r, e in zip(rel, end):
+                    s += e - r
+                tot += s
+        return tot
+
+
+def _fleet_reservations(ward_jobs, incumbent, shared_tiers):
+    """Per-ward reservation maps for one §9 sweep: ward b sees every
+    OTHER ward's currently-committed shared-tier jobs as interval
+    reservations (DESIGN.md §12) — same occupancy, same objective
+    contribution, same queue ties as the frozen-phantom construction
+    they replace, but O(1) carry width in the kernel instead of O(n)
+    extra move candidates. Scan order (c, i) restricted per tier keeps
+    the within-tier queue tie order identical to the phantom append
+    order."""
+    B = len(ward_jobs)
+    out = []
+    for b in range(B):
+        m: Dict[str, List[Reservation]] = {}
+        for c in range(B):
+            if c == b:
+                continue
+            jobs_c, inc_c = ward_jobs[c], incumbent[c]
+            for i, t in enumerate(inc_c):
+                if t in shared_tiers:
+                    j = jobs_c[i]
+                    m.setdefault(t, []).append(Reservation(
+                        arrival=j.release + j.trans.get(t, 0.0),
+                        proc=j.proc[t], release=j.release,
+                        weight=j.weight))
+        out.append(m)
+    return out
+
+
 def _fleet_views(ward_jobs, mpts, busy_until, ward_busy_until, shared_tiers):
     """Per-ward (machines, busy) dicts for INDEPENDENT planning: every
     ward sees the full shared pool (and its initial occupancy) as its own
@@ -445,41 +665,48 @@ def search_fleet(ward_jobs: Sequence[Sequence[JobSpec]],
                  min_batch: int | None = None,
                  jax_threshold: int | None = None,
                  sweep_backend: str = "auto",
-                 pad_bucket: int = 64) -> FleetPlan:
+                 pad_bucket: int = 64,
+                 background: str = "interval") -> FleetPlan:
     """Contention-aware multi-ward planning to a fixed point (DESIGN.md §9).
 
     Starts from B independent per-ward plans (today's `search_batched`
     mode — each ward optimises against the full shared cloud, silently
     double-booking it), rescores them with the fleet-true evaluator
     `simulate_fleet`, then runs Gauss–Seidel sweeps: each sweep replans
-    every ward in one `scheduler_jax.tabu_search_batched` call in which
-    ward b's instance carries the OTHER wards' currently-committed
-    shared-tier jobs as frozen background occupancy (immovable, but fully
-    present in the merged-queue evaluation — so ward b pays, and sees, the
-    delay it inflicts on the rest of the fleet). A ward's proposal is then
-    accepted only if it strictly improves the fleet-true objective, so the
-    incumbent value is monotone decreasing over a finite assignment space
-    and the iteration terminates (§9 termination argument).
+    every ward against the OTHER wards' currently-committed shared-tier
+    jobs as interval reservations (DESIGN.md §12 — queue-active
+    background occupancy the search prices but can never reassign, so
+    ward b pays, and sees, the delay it inflicts on the rest of the
+    fleet). A ward's proposal is then accepted only if it strictly
+    improves the fleet-true objective, so the incumbent value is
+    monotone decreasing over a finite assignment space and the
+    iteration terminates (§9 termination argument); trial values come
+    from the bit-identical `_FleetEval` replay, with one final
+    `simulate_fleet` on the accepted plan (§3.1 invariant).
 
     machines_per_tier: one {tier: count} mapping for all wards or a
     per-ward sequence (shared-tier counts must agree — one pool).
     busy_until: initial free times of the SHARED pools; ward_busy_until:
     optional per-ward occupancy of the per-ward pools. sweep_max_count:
     tabu budget per replanning sweep (small — sweeps only need local
-    repairs on top of the incumbent). pad_bucket: background job slots
-    are padded to multiples of this so the batched search's compiled
-    shape stays stable while the background churns across sweeps.
+    repairs on top of the incumbent). pad_bucket: instance row slots
+    (jobs + reservations) are padded to multiples of this so the batched
+    search's compiled shape stays stable while the background churns
+    across sweeps.
 
     sweep_backend — the §3.3 dispatch question again, at sweep scale:
     "batched" replans all wards in one `tabu_search_batched` device call
     per sweep; "python" loops the incremental per-ward `search`. "auto"
-    (default) picks batched only on an accelerator backend (and B >=
-    min_batch): an augmented instance is dominated by FROZEN background
-    jobs, whose all-n toggle stats the delta-evaluated kernel computes
-    anyway (O(n_aug^2) per ward) while the Python path only ever tries
-    the ~n_b movable jobs against two queues — measured 16x faster on a
-    2-core CPU at B=32, n=100 (~1500 background). On TPU the batched
-    call amortises one dispatch across the fleet, as in §8.
+    (default) picks batched whenever B >= min_batch — on CPU too, since
+    the §12 movable-only carry made a mostly-background ward cost
+    O(rows x movable) per round instead of the O(n_aug^2) that used to
+    hand CPU sweeps to the Python path (DESIGN.md §12).
+
+    background: "interval" (default) models other wards' committed jobs
+    as reservations; "phantom" is the legacy frozen-job construction,
+    kept as the parity oracle for the interval representation
+    (tests/test_intervals.py) — same objectives, same trajectories,
+    O(n_aug) extra move-candidate rows per sweep.
 
     Returns a FleetPlan carrying the final joint plan, both fleet-true
     evaluations, the claimed (double-booked) objective, and the sweep
@@ -517,75 +744,121 @@ def search_fleet(ward_jobs: Sequence[Sequence[JobSpec]],
     threshold = BATCHED_SEARCH_MIN_WARDS if min_batch is None else min_batch
     if sweep_backend not in ("auto", "batched", "python"):
         raise ValueError(f"unknown sweep_backend {sweep_backend!r}")
+    if background not in ("interval", "phantom"):
+        raise ValueError(f"unknown background {background!r}")
     batched_sweeps = sweep_backend == "batched" or (
-        sweep_backend == "auto" and B >= threshold
-        and _accelerator_backend())
+        sweep_backend == "auto" and B >= threshold)
+    if batched_sweeps:
+        pairs = [(int(views[b][0].get(CC, 1)),
+                  int(views[b][0].get(ES, 1))) for b in range(B)]
+        busy_pairs = [tuple(machine_free_times(views[b][1], t, m)
+                            for t, m in zip((CC, ES), pairs[b]))
+                      for b in range(B)]
+    trial_eval = _FleetEval(ward_jobs, mpts, busy_until, ward_busy_until,
+                            shared_tiers)
 
     sweeps = 0
+    changed = False
     pad_to = 0          # sticky across sweeps: one compile for the run
     for _ in range(max_sweeps):
-        # background of ward b: every other ward's shared-tier jobs,
-        # pinned at their committed tier (frozen, but queue-active)
-        bg = [[(ward_jobs[c][i], incumbent[c][i])
-               for c in range(B) if c != b
-               for i in range(len(ward_jobs[c]))
-               if incumbent[c][i] in shared_tiers]
-              for b in range(B)]
-        aug_jobs = [list(ward_jobs[b]) + [j for j, _ in bg[b]]
-                    for b in range(B)]
-        aug_init = [incumbent[b] + [t for _, t in bg[b]]
-                    for b in range(B)]
-        frozen = [[False] * len(ward_jobs[b]) + [True] * len(bg[b])
-                  for b in range(B)]
         proposals: List[List[str]] = []
-        if not batched_sweeps:
-            for b in range(B):
-                plan = search(aug_jobs[b], initial=aug_init[b],
-                              max_count=sweep_max_count,
-                              objective=objective, frozen=frozen[b],
-                              jax_threshold=jax_threshold,
-                              machines_per_tier=views[b][0],
-                              busy_until=views[b][1])
-                proposals.append(plan.assignment()[:len(ward_jobs[b])])
+        if background == "interval":
+            # background of ward b: every other ward's shared-tier jobs,
+            # committed as interval reservations (§12)
+            resvs = _fleet_reservations(ward_jobs, incumbent, shared_tiers)
+            if not batched_sweeps:
+                for b in range(B):
+                    plan = search(list(ward_jobs[b]), initial=incumbent[b],
+                                  max_count=sweep_max_count,
+                                  objective=objective,
+                                  reserved=resvs[b] or None,
+                                  jax_threshold=jax_threshold,
+                                  machines_per_tier=views[b][0],
+                                  busy_until=views[b][1])
+                    proposals.append(plan.assignment())
+            else:
+                from repro.core import scheduler_jax
+                # bucket the padded ROW count (jobs + reservations) and
+                # keep it STICKY across sweeps: the background shrinks
+                # as wards move off the shared cloud, and re-bucketing
+                # downward would retrace the jitted search every sweep
+                # (XLA compile dwarfs the sweep itself)
+                rows = max(len(ward_jobs[b])
+                           + sum(len(v) for v in resvs[b].values())
+                           for b in range(B))
+                pad_to = max(pad_to, -(-rows // pad_bucket) * pad_bucket)
+                _, assigns = scheduler_jax.tabu_search_batched(
+                    [list(jobs) for jobs in ward_jobs],
+                    [[MACHINES.index(t) for t in incumbent[b]]
+                     for b in range(B)],
+                    max_rounds=max(sweep_max_count, 1),
+                    objective=objective, machines_per_tier=pairs,
+                    busy_until=busy_pairs, reserved=resvs, pad_to=pad_to)
+                _note_shape(_batched_shape(
+                    B, pad_to, max(map(len, ward_jobs)), pairs, objective))
+                proposals = [[MACHINES[int(i)]
+                              for i in assigns[b][:len(ward_jobs[b])]]
+                             for b in range(B)]
         else:
-            from repro.core import scheduler_jax
-            pairs = [(int(views[b][0].get(CC, 1)),
-                      int(views[b][0].get(ES, 1))) for b in range(B)]
-            busy_pairs = [tuple(machine_free_times(views[b][1], t, m)
-                                for t, m in zip((CC, ES), pairs[b]))
-                          for b in range(B)]
-            # bucket the padded size and keep it STICKY across sweeps:
-            # the background shrinks as wards move off the shared cloud,
-            # and re-bucketing downward would retrace the jitted search
-            # every sweep (XLA compile dwarfs the sweep itself)
-            n_aug = max(len(jobs) for jobs in aug_jobs)
-            pad_to = max(pad_to, -(-n_aug // pad_bucket) * pad_bucket)
-            _, assigns = scheduler_jax.tabu_search_batched(
-                aug_jobs,
-                [[MACHINES.index(t) for t in init] for init in aug_init],
-                max_rounds=max(sweep_max_count, 1) * pad_to,
-                objective=objective, machines_per_tier=pairs,
-                busy_until=busy_pairs, frozen=frozen, pad_to=pad_to)
-            proposals = [[MACHINES[int(i)]
-                          for i in assigns[b][:len(ward_jobs[b])]]
-                         for b in range(B)]
+            # legacy frozen-phantom background — the §12 parity oracle:
+            # other wards' shared-tier jobs appended as immovable rows
+            bg = [[(ward_jobs[c][i], incumbent[c][i])
+                   for c in range(B) if c != b
+                   for i in range(len(ward_jobs[c]))
+                   if incumbent[c][i] in shared_tiers]
+                  for b in range(B)]
+            aug_jobs = [list(ward_jobs[b]) + [j for j, _ in bg[b]]
+                        for b in range(B)]
+            aug_init = [incumbent[b] + [t for _, t in bg[b]]
+                        for b in range(B)]
+            frozen = [[False] * len(ward_jobs[b]) + [True] * len(bg[b])
+                      for b in range(B)]
+            if not batched_sweeps:
+                for b in range(B):
+                    plan = search(aug_jobs[b], initial=aug_init[b],
+                                  max_count=sweep_max_count,
+                                  objective=objective, frozen=frozen[b],
+                                  jax_threshold=jax_threshold,
+                                  machines_per_tier=views[b][0],
+                                  busy_until=views[b][1])
+                    proposals.append(plan.assignment()[:len(ward_jobs[b])])
+            else:
+                from repro.core import scheduler_jax
+                n_aug = max(len(jobs) for jobs in aug_jobs)
+                pad_to = max(pad_to, -(-n_aug // pad_bucket) * pad_bucket)
+                _, assigns = scheduler_jax.tabu_search_batched(
+                    aug_jobs,
+                    [[MACHINES.index(t) for t in init]
+                     for init in aug_init],
+                    max_rounds=max(sweep_max_count, 1),
+                    objective=objective, machines_per_tier=pairs,
+                    busy_until=busy_pairs, frozen=frozen, pad_to=pad_to)
+                _note_shape(_batched_shape(
+                    B, pad_to, max(map(len, ward_jobs)), pairs, objective))
+                proposals = [[MACHINES[int(i)]
+                              for i in assigns[b][:len(ward_jobs[b])]]
+                             for b in range(B)]
         sweeps += 1
         # Gauss–Seidel acceptance: commit each ward's proposal only if it
         # strictly improves the FLEET-TRUE objective given everything
-        # already committed this sweep — monotone, hence terminating
+        # already committed this sweep — monotone, hence terminating.
+        # `trial_eval` replays `simulate_fleet`'s arithmetic bit-for-bit
+        # at a fraction of its cost; the accepted plan is rescored by the
+        # reference evaluator once, after the loop.
         improved = False
         for b in range(B):
             if proposals[b] == incumbent[b]:
                 continue
             trial = list(incumbent)
             trial[b] = proposals[b]
-            fs = fleet_eval(trial)
-            v = fs.objective(objective)
+            v = trial_eval(trial, objective)
             if v < best - 1e-9:
-                incumbent, best_fleet, best = trial, fs, v
-                improved = True
+                incumbent, best = trial, v
+                improved = changed = True
         if not improved:
             break
+    if changed:
+        best_fleet = fleet_eval(incumbent)
 
     return FleetPlan(assignments=[list(a) for a in incumbent],
                      fleet=best_fleet, naive_fleet=naive_fleet,

@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.simulator import JobSpec
+from repro.core.simulator import JobSpec, Reservation
 from repro.core.tiers import CC, ED, ES
 
 N_MACHINES = 3
@@ -215,33 +215,42 @@ def exact_optimum_jax(jobs: Sequence[JobSpec], objective: str = "weighted",
 _OBJ_IDX = {"weighted": 0, "unweighted": 1, "last": 2}
 
 
-def _tier_rounds(mask_T, arr_T, p_T, w_T, rel_T, busy_T, oi: int):
-    """Incumbent + all-n toggled stats of BOTH shared tiers of every
-    instance in one scan.
+def _tier_rounds(mask_T, arr_T, p_T, w_T, rel_T, busy_T, ps, oi: int):
+    """Incumbent + movable-position toggled stats of BOTH shared tiers of
+    every instance in one scan.
 
     Inputs are stacked per-tier queue-order constants, shape (B, 2, n)
     (and (B, 2, m) machine free times — mixed fleets pad the smaller tier
-    with +inf phantom machines, which FIFO dispatch never selects). Row s
-    of the scan carry tracks the queue with the job at position s toggled
-    (member removed / non-member inserted); row n is the untouched
-    incumbent, so both come from identical arithmetic. Columns walk the
-    queue once, so the whole B-instance 2-tier n-toggle neighbourhood
-    costs one length-n scan whose per-step op count is independent of B
-    and tier count (op dispatch, not flops, bounds CPU throughput — the
-    batch rides along inside each op).
+    with +inf phantom machines, which FIFO dispatch never selects).
+    ``ps`` (B, 2, S) lists the queue POSITIONS of each instance's movable
+    jobs (DESIGN.md §12): toggled stats are only ever consumed for moves
+    of movable jobs, so the carry tracks S toggle columns instead of n —
+    a mostly-frozen ward (reservations, fleet background) costs
+    O(movable) per round instead of O(n). Column s of the carry tracks
+    the queue with the job at queue position ps[..., s] toggled (member
+    removed / non-member inserted). Columns walk the queue once, so the
+    whole B-instance 2-tier S-toggle neighbourhood costs one length-n
+    scan whose per-step op count is independent of B and tier count (op
+    dispatch, not flops, bounds CPU throughput — the batch rides along
+    inside each op).
 
     All-single-server fleets (m == 1, the static shape of busy_T) carry
     the running cummax of q = arr − P_prev (the §3.2 prefix recurrence);
     multi-machine fleets carry per-row free-slot vectors (the vectorised
     free-time heap, start = max(arrival, earliest free) exactly as
-    `simulate`). Returns ((B, 2) incumbent stats, (B, 2, n) toggled
-    stats indexed by queue position)."""
+    `simulate`). Returns ((B, 2) incumbent stats, (B, 2, S) toggled
+    stats aligned with ps). Per toggle column the arithmetic is
+    elementwise-identical to the old all-positions carry, so restricting
+    to movable columns is a pure column gather — bit-identical values."""
     B, _, n = mask_T.shape
     m = busy_T.shape[2]
-    rows = jnp.arange(n + 1)
+    S = ps.shape[2]
 
     def lead(x):                                # (B, 2, n) -> (n, B, 2)
         return jnp.moveaxis(x, 2, 0)
+
+    def gat(x):                                 # (B, 2, n) -> (B, 2, S)
+        return jnp.take_along_axis(x, ps, axis=2)
 
     if m == 1:
         p_eff = jnp.where(mask_T, p_T, 0.0)
@@ -278,61 +287,69 @@ def _tier_rounds(mask_T, arr_T, p_T, w_T, rel_T, busy_T, oi: int):
             own = jnp.where(
                 mask_T, 0.0,
                 (w_T if oi == 0 else 1.0) * (G + csum - rel_T))
-            # T_s = sum_{j>s} wm_j max(G_s, R_{s+1,j}): one scan over
-            # queue positions with an O(B n) carry and five small fused
-            # ops per step — no O(n^2) tensors at any instance size. For
-            # j <= s the unmasked accumulator collects wm_j G_s (R is
-            # still -inf there), subtracted afterwards via wpre.
-            jgt = jnp.arange(n)[:, None] > jnp.arange(n)[None, :]
+            # T_s = sum_{j>s} wm_j max(G_s, R_{s+1,j}) for each movable
+            # toggle position s = ps[..., col]: one scan over queue
+            # positions with an O(B S) carry and five small fused ops per
+            # step — no O(n^2) tensors, and the carry width is the
+            # MOVABLE count, not the instance size. For j <= s the
+            # unmasked accumulator collects wm_j G_s (R is still -inf
+            # there), subtracted afterwards via wpre.
+            Gm = gat(G)
 
             def step(carry, xs):
-                R, acc = carry                         # (B, 2, n) each
-                q_j, wm_j, g_j = xs                    # (B,2) (B,2) (n,)
+                R, acc = carry                         # (B, 2, S) each
+                j, q_j, wm_j = xs                      # scalar, (B,2) x2
                 R = jnp.maximum(
-                    R, jnp.where(g_j, q_j[..., None], -jnp.inf))
-                acc = acc + wm_j[..., None] * jnp.maximum(G, R)
+                    R, jnp.where(j > ps, q_j[..., None], -jnp.inf))
+                acc = acc + wm_j[..., None] * jnp.maximum(Gm, R)
                 return (R, acc), None
 
-            init = (jnp.full((B, 2, n), -jnp.inf),
-                    jnp.zeros((B, 2, n), p_T.dtype))
+            init = (jnp.full((B, 2, S), -jnp.inf),
+                    jnp.zeros((B, 2, S), p_T.dtype))
             (_, accT), _ = jax.lax.scan(
-                step, init, (lead(q), lead(wm), jgt), unroll=4)
-            tog = pre + own + (accT - G * wpre) + suf_lin
+                step, init, (jnp.arange(n), lead(q), lead(wm)), unroll=4)
+            tog = gat(pre) + gat(own) + (accT - Gm * gat(wpre)) \
+                + gat(suf_lin)
             return stat, tog
 
-        # "last" objective: max over members doesn't decompose into
-        # prefix/suffix sums — walk the queue with per-row running maxima
-        # (row s = toggle at s, row n = incumbent), O(B n) carry
-        pad = jnp.zeros((B, 2, 1), p_T.dtype)
-        delta_r = jnp.concatenate([delta, pad], 2)
-        q_self_r = jnp.concatenate([q_self, pad - jnp.inf], 2)
-
-        def step(carry, xs):
-            run_max, acc = carry                # (B, 2, n+1) each
-            j, q_j, c_j, m_j = xs
-            jeq = j == rows                     # (n+1,), broadcasts
-            jge = j >= rows
-            q_col = jnp.where(jge & ~jeq, q_j[..., None] - delta_r,
-                              jnp.where(jeq, q_self_r, q_j[..., None]))
-            run_max = jnp.maximum(run_max, q_col)
-            e = run_max + c_j[..., None] + jnp.where(jge, delta_r, 0.0)
-            live = m_j[..., None] != jeq
-            acc = jnp.maximum(acc, jnp.where(live, e, 0.0))
-            return (run_max, acc), None
-
-        init = (jnp.broadcast_to(free0, (B, 2, n + 1)).astype(p_T.dtype),
-                jnp.zeros((B, 2, n + 1), p_T.dtype))
-        (_, acc), _ = jax.lax.scan(
-            step, init, (jnp.arange(n), lead(q), lead(csum),
-                         lead(mask_T)), unroll=4)
-        return acc[:, :, n], acc[:, :, :n]
+        # "last" objective: the same toggle decomposition holds under max
+        # (DESIGN.md §12) — members before s keep their incumbent
+        # completions, an inserted s completes at G_s + csum_s, and for
+        # members j > s the max of e'_j = max(G_s, R_{s+1,j}) + C_j
+        # splits into G_s + max_j C_j plus the max-plus exchange
+        #   max_{j>s}(R_{s+1,j} + C_j) = max_{i>s}(q_i + SC_i),
+        # SC = inclusive suffix cummax of member csum — all O(n)
+        # prefix/suffix cummaxes, no sequential walk (ROADMAP
+        # accelerator-truth item).
+        neg = jnp.full((B, 2, 1), -jnp.inf)
+        e_mem = jnp.where(mask_T, e_inc, -jnp.inf)
+        pmax = jnp.concatenate(
+            [neg, jax.lax.cummax(e_mem, axis=2)[:, :, :-1]], 2)
+        csum_mem = jnp.where(mask_T, csum, -jnp.inf)
+        SC = jnp.flip(jax.lax.cummax(jnp.flip(csum_mem, 2), axis=2), 2)
+        SCx = jnp.concatenate([SC[:, :, 1:], neg], 2)
+        g = q + SC
+        Hx = jnp.concatenate(
+            [jnp.flip(jax.lax.cummax(jnp.flip(g, 2), axis=2),
+                      2)[:, :, 1:], neg], 2)
+        own = jnp.where(mask_T, -jnp.inf, G + csum)
+        tog = jnp.maximum(jnp.maximum(pmax, own),
+                          jnp.maximum(G + SCx, Hx))
+        tog = jnp.maximum(tog, 0.0)            # empty-queue floor
+        stat = jnp.maximum(
+            jnp.max(e_mem, axis=2, initial=-jnp.inf), 0.0)
+        return stat, gat(tog)
 
     slots = jnp.arange(m)
+    # column S is a sentinel toggle position (n, never a queue index):
+    # its row walks the untouched incumbent with identical arithmetic
+    ps_ext = jnp.concatenate(
+        [ps, jnp.full((B, 2, 1), n, ps.dtype)], axis=2)
 
     def step(carry, xs):
-        free, acc = carry                   # (B, 2, n+1, m), (B, 2, n+1)
+        free, acc = carry                   # (B, 2, S+1, m), (B, 2, S+1)
         j, a_j, p_j, w_j, rel_j, m_j = xs   # scalar, then (B, 2) each
-        live = m_j[..., None] != (j == rows)
+        live = m_j[..., None] != (j == ps_ext)
         slot = jnp.argmin(free, axis=3)
         fmin = jnp.take_along_axis(free, slot[..., None], axis=3)[..., 0]
         e = jnp.maximum(a_j[..., None], fmin) + p_j[..., None]
@@ -346,12 +363,12 @@ def _tier_rounds(mask_T, arr_T, p_T, w_T, rel_T, busy_T, oi: int):
                 live, w_j[..., None] * resp if oi == 0 else resp, 0.0)
         return (free, acc), None
 
-    init = (jnp.broadcast_to(busy_T[:, :, None, :], (B, 2, n + 1, m)),
-            jnp.zeros((B, 2, n + 1), p_T.dtype))
+    init = (jnp.broadcast_to(busy_T[:, :, None, :], (B, 2, S + 1, m)),
+            jnp.zeros((B, 2, S + 1), p_T.dtype))
     (_, acc), _ = jax.lax.scan(
         step, init, (jnp.arange(n), lead(arr_T), lead(p_T), lead(w_T),
                      lead(rel_T), lead(mask_T)))
-    return acc[:, :, n], acc[:, :, :n]
+    return acc[:, :, S], acc[:, :, :S]
 
 
 def _device_round(assign, dev_end, dev_resp, dev_wresp, oi: int):
@@ -379,47 +396,56 @@ def _device_round(assign, dev_end, dev_resp, dev_wresp, oi: int):
     return stat, stat[:, None] + jnp.where(member, -con, con)
 
 
-def _round_batched(assign, movable, tc, dev, oi: int):
+def _round_batched(assign, mov_idx, mov_ok, tc, dev, oi: int):
     """One delta-evaluated neighbourhood round for the whole batch.
 
-    Returns ((B,) incumbent objectives, (B, n, 3) candidate values):
-    entry (b, k, m) is the exact objective of instance b with job k moved
-    to machine m, assembled from the two affected tiers' toggled stats
-    and the incumbent's third-tier stat. No-op moves and non-movable jobs
-    — phantom padding AND frozen background jobs, which participate fully
-    in every queue evaluation but may never be reassigned (DESIGN.md §9)
-    — score +inf. tc holds the stacked (B, 2, n) per-tier queue-order
-    constants; dev the device-tier constants."""
+    Returns ((B,) incumbent objectives, (B, S, 3) candidate values):
+    entry (b, i, m) is the exact objective of instance b with job
+    mov_idx[b, i] moved to machine m, assembled from the two affected
+    tiers' toggled stats and the incumbent's third-tier stat. Only
+    movable jobs get candidate slots (DESIGN.md §12) — phantom padding,
+    frozen background jobs, and interval reservations participate fully
+    in every queue evaluation (they occupy machines and count toward the
+    objective) but never appear in mov_idx, so a mostly-frozen ward
+    prices O(movable) candidates per round. No-op moves and invalid
+    padding slots (~mov_ok) score +inf. tc holds the stacked (B, 2, n)
+    per-tier queue-order constants; dev the device-tier constants."""
     B, n = assign.shape
+    S = mov_idx.shape[1]
     mask_T = jnp.take_along_axis(
         jnp.stack([assign == 0, assign == 1], axis=1), tc["order"], axis=2)
-    stat_T, tog_pos = _tier_rounds(mask_T, tc["arr"], tc["p"], tc["w"],
-                                   tc["rel"], tc["busy"], oi)
-    tog_T = jnp.take_along_axis(tog_pos, tc["pos"], axis=2)  # pos -> job
+    # queue positions of the movable jobs on each tier — tog comes back
+    # already aligned with the movable slots, no pos->job scatter needed
+    ps = jnp.take_along_axis(
+        tc["pos"], jnp.broadcast_to(mov_idx[:, None, :], (B, 2, S)), axis=2)
+    stat_T, tog_T = _tier_rounds(mask_T, tc["arr"], tc["p"], tc["w"],
+                                 tc["rel"], tc["busy"], ps, oi)
     stat_d, tog_d = _device_round(assign, dev["end"], dev["resp"],
                                   dev["wresp"], oi)
+    tog_d = jnp.take_along_axis(tog_d, mov_idx, axis=1)      # (B, S)
+    a_mov = jnp.take_along_axis(assign, mov_idx, axis=1)     # (B, S)
     stats = jnp.concatenate([stat_T, stat_d[:, None]], 1)    # (B, 3)
-    tog = jnp.concatenate([tog_T, tog_d[:, None, :]], 1)     # (B, 3, n)
+    tog = jnp.concatenate([tog_T, tog_d[:, None, :]], 1)     # (B, 3, S)
     if oi == 2:
         total = jnp.max(stats, axis=1)
-        src_t = jnp.take_along_axis(tog, assign[:, None, :],
+        src_t = jnp.take_along_axis(tog, a_mov[:, None, :],
                                     axis=1)[:, 0, :]
         third = jnp.clip(
-            3 - assign[:, :, None] - jnp.arange(3)[None, None, :], 0, 2)
+            3 - a_mov[:, :, None] - jnp.arange(3)[None, None, :], 0, 2)
         stats_third = jnp.take_along_axis(
-            stats, third.reshape(B, -1), axis=1).reshape(B, n, 3)
+            stats, third.reshape(B, -1), axis=1).reshape(B, S, 3)
         vals = jnp.maximum(jnp.maximum(src_t[:, :, None],
                                        tog.transpose(0, 2, 1)),
                            stats_third)
     else:
         total = stats[:, 0] + stats[:, 1] + stats[:, 2]
         d = tog - stats[:, :, None]             # per-tier toggle deltas
-        src_d = jnp.take_along_axis(d, assign[:, None, :], axis=1)[:, 0, :]
+        src_d = jnp.take_along_axis(d, a_mov[:, None, :], axis=1)[:, 0, :]
         vals = total[:, None, None] + src_d[:, :, None] + \
             d.transpose(0, 2, 1)
-    vals = jnp.where(jnp.arange(3)[None, None, :] == assign[:, :, None],
+    vals = jnp.where(jnp.arange(3)[None, None, :] == a_mov[:, :, None],
                      jnp.inf, vals)
-    vals = jnp.where(movable[:, :, None], vals, jnp.inf)
+    vals = jnp.where(mov_ok[:, :, None], vals, jnp.inf)
     return total, vals
 
 
@@ -469,21 +495,117 @@ def _greedy_assign_batched(rel, w, proc, trans, valid, busy_c, busy_e):
     return assign
 
 
-@functools.partial(jax.jit, static_argnames=("objective", "greedy_init"))
-def _tabu_run_batched(assign0, rel, w, proc, trans, movable, max_rounds,
-                      busy_c, busy_e, objective: str,
-                      greedy_init: bool = False):
-    """Steepest descent over the n x 3 single-move neighbourhood for B
-    instances at once, entirely on-device: one batched delta-evaluated
-    round per while_loop iteration, accept each instance's best strictly
-    improving move (plus a second, exactly-composing move on the other
-    shared tier when one improves), per-instance convergence flags (a
-    ward at a 1-move local optimum idles while stragglers keep
-    searching). The incumbent objective is re-derived from fresh per-tier
-    passes every round — no accumulator drift by construction. Machine
-    counts are carried by the busy vector shapes (phantom machines =
-    +inf), so changing fleet sizes does not retrace beyond the new
-    shapes."""
+def _run_rounds(assign0, mov_idx, mov_ok, tc, dev, oi, max_moves, binds):
+    """mode="round" inner loop (see `_tabu_run_batched`): steepest
+    descent over the S x 3 single-move neighbourhood, one wide
+    delta-evaluated round per while_loop iteration, accept each
+    instance's best strictly improving move plus a second,
+    exactly-composing move on the other shared tier when one improves
+    (cloud/edge queues are disjoint and the private device tier is
+    additive per job, so the pair composes exactly for sum
+    objectives)."""
+    B, _ = assign0.shape
+    S = mov_idx.shape[1]
+
+    def round_all(assign):
+        return _round_batched(assign, mov_idx, mov_ok, tc, dev, oi)
+
+    def cond(state):
+        _, _, rnd, active = state
+        return jnp.any(active) & (rnd < max_moves)
+
+    def body(state):
+        assign, _, rnd, active = state
+        total, vals = round_all(assign)
+        flat = vals.reshape(B, -1)              # candidate (s, m) = s*3+m
+        i1 = jnp.argmin(flat, axis=1)
+        v1 = jnp.take_along_axis(flat, i1[:, None], axis=1)[:, 0]
+        s1 = i1 // N_MACHINES
+        k1 = jnp.take_along_axis(mov_idx, s1[:, None], axis=1)[:, 0]
+        m1 = (i1 % N_MACHINES).astype(assign.dtype)
+        improved = active & (v1 < total)
+        src1 = assign[binds, k1]
+        new_assign = assign.at[binds, k1].set(
+            jnp.where(improved, m1, src1))
+        # the carried value is the FRESH per-tier evaluation of the
+        # incumbent whenever a ward converges (its last round rejects
+        # every move, so `total` is its final assignment's exact score);
+        # only a max_rounds cap can surface a delta-assembled value
+        value = jnp.where(improved, v1, total)
+        if oi != 2:
+            # paired acceptance: a second strictly-improving move whose
+            # shared-tier footprint is disjoint from the first composes
+            # EXACTLY for sum objectives — its standalone delta still
+            # holds after the first move commits
+            sh0 = (src1 == 0) | (m1 == 0)
+            sh1 = (src1 == 1) | (m1 == 1)
+            other = jnp.where(sh0, 1, 0).astype(assign.dtype)
+            pairable = improved & ~(sh0 & sh1)
+            a_slot = jnp.take_along_axis(assign, mov_idx, axis=1)
+            ok_src = (a_slot == other[:, None]) | (a_slot == 2)
+            mr = jnp.arange(N_MACHINES)[None, None, :]
+            ok_dst = (mr == other[:, None, None]) | (mr == 2)
+            elig = (ok_src[:, :, None] & ok_dst &
+                    (jnp.arange(S)[None, :, None] != s1[:, None, None]))
+            flat2 = jnp.where(elig.reshape(B, -1), flat, jnp.inf)
+            i2 = jnp.argmin(flat2, axis=1)
+            v2 = jnp.take_along_axis(flat2, i2[:, None], axis=1)[:, 0]
+            s2 = i2 // N_MACHINES
+            k2 = jnp.take_along_axis(mov_idx, s2[:, None], axis=1)[:, 0]
+            m2 = (i2 % N_MACHINES).astype(assign.dtype)
+            accept2 = pairable & (v2 < total)
+            new_assign = new_assign.at[binds, k2].set(
+                jnp.where(accept2, m2, new_assign[binds, k2]))
+            value = jnp.where(accept2, value + (v2 - total), value)
+        return new_assign, value, rnd + 1, improved
+
+    state = (assign0, jnp.full((B,), jnp.inf), jnp.int32(0),
+             jnp.ones((B,), bool))
+    assign, totals, rounds, _ = jax.lax.while_loop(cond, body, state)
+    # max_rounds == 0 (greedy probe): the loop never evaluated anything
+    totals = jax.lax.cond(rounds == 0,
+                          lambda args: round_all(args[0])[0],
+                          lambda args: args[1], (assign, totals))
+    return assign, totals, rounds
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("objective", "greedy_init", "mode"))
+def _tabu_run_batched(assign0, rel, w, proc, trans, movable, mov_idx,
+                      mov_ok, max_rounds, busy_c, busy_e, objective: str,
+                      greedy_init: bool = False, mode: str = "pass"):
+    """Algorithm-2 search for B instances at once, entirely on-device,
+    in one of two shape-dispatched regimes (DESIGN.md §12):
+
+    mode="pass" — the mostly-background regime (movable slots are a
+    small fraction of the padded rows). Each while_loop iteration is
+    one PASS over the movable slots; per slot the job's 3 destination
+    moves are delta-evaluated exactly against the CURRENT assignment (a
+    width-1 toggle carry) and a strictly improving best move commits
+    immediately, exactly like the incremental Python tabu round. The
+    toggle scan is carry-bandwidth-bound, so S cheap width-1 evals that
+    can each commit a move beat one width-S eval that commits one —
+    the steepest-descent rounds spent ~95% of mostly-converged fleet
+    sweeps re-pricing unchanged candidates.
+
+    mode="round" — the movable-dominated regime. One steepest-descent
+    round per while_loop iteration: all S toggles priced in one wide
+    carry, accept each instance's best strictly improving move (plus a
+    second, exactly-composing move on the other shared tier when one
+    improves). At small row counts the per-eval dispatch floor — not
+    carry width — dominates, so one wide eval per accepted move beats
+    S narrow evals per pass; `max_rounds` passes translate to a
+    `max_rounds * S` move budget.
+
+    Both regimes share the tier/device precomputation, per-instance
+    convergence flags (a converged ward idles while stragglers keep
+    searching), and drift-free values: the incumbent objective is
+    re-derived from fresh per-tier stats at every evaluation, so a
+    converged ward's reported value is a fresh full evaluation.
+    Machine counts are carried by the busy vector shapes (phantom
+    machines = +inf), so changing fleet sizes does not retrace beyond
+    the new shapes. max_rounds counts passes (the Python search's
+    max_count)."""
     oi = _OBJ_IDX[objective]
     B, n = assign0.shape
     if greedy_init:
@@ -516,10 +638,15 @@ def _tabu_run_batched(assign0, rel, w, proc, trans, movable, max_rounds,
     dev = {"end": dev_end, "resp": dev_end - rel,
            "wresp": w * (dev_end - rel)}
 
-    def round_all(assign):
-        return _round_batched(assign, movable, tc, dev, oi)
-
     binds = jnp.arange(B)
+    S = mov_idx.shape[1]
+    # real (non-padding) slots are a per-ward PREFIX of mov_idx
+    # (_movable_slots packs them first), so slot s of pass r visits the
+    # same job for a ward no matter how much batch padding it rides with
+    # (the batched==solo parity suite pins this)
+    if mode == "round":
+        return _run_rounds(assign0, mov_idx, mov_ok, tc, dev, oi,
+                           max_rounds * jnp.int32(S), binds)
 
     def cond(state):
         _, _, rnd, active = state
@@ -527,55 +654,91 @@ def _tabu_run_batched(assign0, rel, w, proc, trans, movable, max_rounds,
 
     def body(state):
         assign, _, rnd, active = state
-        total, vals = round_all(assign)
-        flat = vals.reshape(B, -1)              # candidate (k, m) = k*3 + m
-        i1 = jnp.argmin(flat, axis=1)
-        v1 = jnp.take_along_axis(flat, i1[:, None], axis=1)[:, 0]
-        k1 = i1 // N_MACHINES
-        m1 = (i1 % N_MACHINES).astype(assign.dtype)
-        improved = active & (v1 < total)
-        src1 = assign[binds, k1]
-        new_assign = assign.at[binds, k1].set(
-            jnp.where(improved, m1, src1))
-        # the carried value is the FRESH per-tier evaluation of the
-        # incumbent whenever a ward converges (its last round rejects
-        # every move, so `total` is its final assignment's exact score);
-        # only a max_rounds cap can surface a delta-assembled value
-        value = jnp.where(improved, v1, total)
-        if oi != 2:
-            # paired acceptance: a second strictly-improving move whose
-            # shared-tier footprint is disjoint from the first composes
-            # EXACTLY for sum objectives — cloud/edge queues are disjoint
-            # and the private device tier is additive per job — so its
-            # standalone delta still holds after the first move commits
-            sh0 = (src1 == 0) | (m1 == 0)
-            sh1 = (src1 == 1) | (m1 == 1)
-            other = jnp.where(sh0, 1, 0).astype(assign.dtype)
-            pairable = improved & ~(sh0 & sh1)
-            ok_src = (assign == other[:, None]) | (assign == 2)
-            mr = jnp.arange(N_MACHINES)[None, None, :]
-            ok_dst = (mr == other[:, None, None]) | (mr == 2)
-            elig = (ok_src[:, :, None] & ok_dst &
-                    (jnp.arange(n)[None, :, None] != k1[:, None, None]))
-            flat2 = jnp.where(elig.reshape(B, -1), flat, jnp.inf)
-            i2 = jnp.argmin(flat2, axis=1)
-            v2 = jnp.take_along_axis(flat2, i2[:, None], axis=1)[:, 0]
-            k2 = i2 // N_MACHINES
-            m2 = (i2 % N_MACHINES).astype(assign.dtype)
-            accept2 = pairable & (v2 < total)
-            new_assign = new_assign.at[binds, k2].set(
-                jnp.where(accept2, m2, new_assign[binds, k2]))
-            value = jnp.where(accept2, value + (v2 - total), value)
-        return new_assign, value, rnd + 1, improved
+
+        def slot(carry, s):
+            assign, total, changed = carry
+            k = jnp.take(mov_idx, s, axis=1)            # (B,) job id
+            ok = jnp.take(mov_ok, s, axis=1) & active
+            # width-1 toggle: fresh incumbent stats + job k's 3 moves,
+            # exact against the assignment as of THIS slot
+            tot, vals = _round_batched(assign, k[:, None], ok[:, None],
+                                       tc, dev, oi)
+            flat = vals[:, 0, :]                        # (B, 3)
+            m1 = jnp.argmin(flat, axis=1)
+            v1 = jnp.take_along_axis(flat, m1[:, None], axis=1)[:, 0]
+            improved = v1 < tot         # +inf masks no-ops and ~ok slots
+            assign = assign.at[binds, k].set(
+                jnp.where(improved, m1.astype(assign.dtype),
+                          assign[binds, k]))
+            # the carried value is the FRESH per-tier evaluation of the
+            # incumbent whenever the slot rejects its moves — so a
+            # converged ward (a full pass of rejections) always reports
+            # its final assignment's exact score; only a max_rounds cap
+            # can surface a (one-composition) delta-assembled value
+            total = jnp.where(improved, v1, tot)
+            return (assign, total, changed | improved), None
+
+        (assign, total, changed), _ = jax.lax.scan(
+            slot, (assign, jnp.full((B,), jnp.inf), jnp.zeros((B,), bool)),
+            jnp.arange(S))
+        return assign, total, rnd + 1, changed
 
     state = (assign0, jnp.full((B,), jnp.inf), jnp.int32(0),
              jnp.ones((B,), bool))
     assign, totals, rounds, _ = jax.lax.while_loop(cond, body, state)
     # max_rounds == 0 (greedy probe): the loop never evaluated anything
-    totals = jax.lax.cond(rounds == 0,
-                          lambda args: round_all(args[0])[0],
-                          lambda args: args[1], (assign, totals))
+    totals = jax.lax.cond(
+        rounds == 0,
+        lambda args: _round_batched(args[0], mov_idx, mov_ok, tc, dev,
+                                    oi)[0],
+        lambda args: args[1], (assign, totals))
     return assign, totals, rounds
+
+
+def _reservation_rows(resv):
+    """Host-side kernel rows for one ward's {tier: [Reservation]} map
+    (DESIGN.md §12) — the interval representation compiles into ordinary
+    pinned rows appended AFTER the instance's jobs: arrival enters via
+    trans = arrival − release (so queue key (arrival, release, index)
+    ties break jobs-first, then reservation input order, exactly like
+    `simulate`), the row occupies its tier's pool for ``proc`` and
+    contributes weight*(end − release) to the objective, and movable
+    stays False so no round ever prices a move on it. Returns the
+    (K, 8) _specs_to_np-layout block plus the (K,) tier codes."""
+    rows, tiers = [], []
+    for m, tier in ((0, CC), (1, ES)):
+        for r in (resv or {}).get(tier, ()):
+            p = [0.0] * N_MACHINES
+            t = [0.0] * N_MACHINES
+            p[m] = float(r.proc)
+            t[m] = float(r.arrival) - float(r.release)
+            rows.append((float(r.release), float(r.weight), *p, *t))
+            tiers.append(m)
+    bad = sorted(set(resv or {}) - {CC, ES})
+    if bad:
+        raise ValueError(f"reservations may only name shared tiers "
+                         f"[{CC!r}, {ES!r}], got {bad}")
+    return (np.asarray(rows, np.float32).reshape(-1, 8),
+            np.asarray(tiers, np.int32))
+
+
+def _movable_slots(movable: np.ndarray, n_max: int):
+    """Bucketed movable-slot index arrays for the batch (DESIGN.md §12):
+    S = the max per-instance movable count rounded up to a multiple of 16
+    (capped at n_max), so the compiled (B, n, S) kernel shape stays
+    stable while reservation/background counts drift under metro load.
+    Returns (mov_idx (B, S) int32 job ids, mov_ok (B, S) bool — padding
+    slots point at job 0 and are masked +inf by the round)."""
+    B = movable.shape[0]
+    smax = int(movable.sum(axis=1).max()) if B else 0
+    S = min(n_max, ((max(smax, 1) + 15) // 16) * 16)
+    mov_idx = np.zeros((B, S), np.int32)
+    mov_ok = np.zeros((B, S), bool)
+    for b in range(B):
+        idx = np.flatnonzero(movable[b])
+        mov_idx[b, :len(idx)] = idx
+        mov_ok[b, :len(idx)] = True
+    return mov_idx, mov_ok
 
 
 def _per_instance_mpt(machines_per_tier, B: int):
@@ -599,6 +762,7 @@ def tabu_search_batched(batch_jobs: Sequence[Sequence[JobSpec]],
                         machines_per_tier=(1, 1),
                         busy_until=None,
                         frozen=None,
+                        reserved=None,
                         pad_to: int | None = None):
     """Plan B independent ward instances in ONE jitted device call.
 
@@ -622,20 +786,40 @@ def tabu_search_batched(batch_jobs: Sequence[Sequence[JobSpec]],
     — contention sweeps bucket their background size with it so the
     compiled shape stays stable while the background churns.
 
-    Returns (objectives (B,) float ndarray, [per-ward (n_i,) int arrays]).
-    Termination is per-instance: a ward that reaches a 1-move local
-    optimum goes inactive while stragglers keep searching; the device call
-    returns when every ward has converged (or after max_rounds moves,
-    default 50 * n_max). Each ward's trajectory is identical to a solo
-    `tabu_search_jax` run — same round code, same tie-breaks — which the
-    parity suite pins (DESIGN.md §8). Recompiles per (B, n_max, padded
-    machine counts, objective); replans reusing one shape hit the cache.
+    reserved: optional per-ward {tier: [Reservation]} maps (DESIGN.md
+    §12) — committed background occupancy on the shared tiers. Each
+    reservation compiles into one pinned row appended after the ward's
+    jobs (occupies its pool, counts toward the objective, never movable),
+    but because the toggle carry only tracks MOVABLE slots, reservations
+    cost O(1) carry width instead of widening the O(n) candidate set the
+    way frozen phantom jobs did. Requires an explicit ``initial`` (for
+    the ward's own jobs only — reservation rows pin themselves).
+
+    Returns (objectives (B,) float ndarray, [per-ward (n_i,) int arrays])
+    where objectives INCLUDE reservation contributions and assignments
+    cover only the ward's own jobs. Termination is per-instance: a ward
+    that reaches a 1-move local optimum goes inactive while stragglers
+    keep searching; the device call returns when every ward has converged
+    (or after max_rounds accept-as-you-go passes over the movable slots —
+    the Python search's max_count, default 50). Each ward's
+    trajectory is identical to a solo `tabu_search_jax` run — same pass
+    code, same tie-breaks — which the parity suite pins (DESIGN.md §8).
+    Recompiles per (B, n_max, movable bucket S, padded machine counts,
+    objective); replans reusing one shape hit the cache.
     """
     B = len(batch_jobs)
     if B == 0:
         return np.zeros((0,)), []
+    if reserved is None:
+        reserved = [None] * B
+    elif initial is None and any(r for r in reserved):
+        raise ValueError("reservations require an explicit initial "
+                         "assignment (greedy init ignores their "
+                         "occupancy)")
+    rsv = [_reservation_rows(r) for r in reserved]
     sizes = [len(jobs) for jobs in batch_jobs]
-    n_max = max(sizes)
+    rows = [nb + rr.shape[0] for nb, (rr, _) in zip(sizes, rsv)]
+    n_max = max(rows)
     if pad_to is not None:
         n_max = max(n_max, int(pad_to))
     if frozen is not None and initial is None:
@@ -661,24 +845,40 @@ def tabu_search_batched(batch_jobs: Sequence[Sequence[JobSpec]],
         bc, be = _normalize_busy(busy_until[b], mpts[b])
         busy_c[b, :mpts[b][0]] = bc
         busy_e[b, :mpts[b][1]] = be
-        if nb == 0:
-            continue
-        rel[b, :nb], w[b, :nb], proc[b, :nb], trans[b, :nb] = \
-            _specs_to_np(jobs)
-        movable[b, :nb] = True
-        if frozen is not None and frozen[b] is not None:
-            fr = np.asarray(list(frozen[b]), bool)
-            if fr.shape != (nb,):
-                raise ValueError(f"ward {b}: frozen mask has shape "
-                                 f"{fr.shape}, expected ({nb},)")
-            movable[b, :nb] &= ~fr
-        if initial is not None:
-            assign0[b, :nb] = list(initial[b])
+        rr, rt = rsv[b]
+        if nb:
+            rel[b, :nb], w[b, :nb], proc[b, :nb], trans[b, :nb] = \
+                _specs_to_np(jobs)
+            movable[b, :nb] = True
+            if frozen is not None and frozen[b] is not None:
+                fr = np.asarray(list(frozen[b]), bool)
+                if fr.shape != (nb,):
+                    raise ValueError(f"ward {b}: frozen mask has shape "
+                                     f"{fr.shape}, expected ({nb},)")
+                movable[b, :nb] &= ~fr
+            if initial is not None:
+                assign0[b, :nb] = list(initial[b])
+        if rt.shape[0]:
+            hi = nb + rt.shape[0]
+            rel[b, nb:hi] = rr[:, 0]
+            w[b, nb:hi] = rr[:, 1]
+            proc[b, nb:hi] = rr[:, 2:5]
+            trans[b, nb:hi] = rr[:, 5:8]
+            assign0[b, nb:hi] = rt
+    mov_idx, mov_ok = _movable_slots(movable, n_max)
     if max_rounds is None:
-        max_rounds = 50 * n_max
+        max_rounds = 50
+    # static regime dispatch (DESIGN.md §12): movable-dominated batches
+    # (movable bucket at least half the padded rows) take the wide
+    # steepest-descent rounds; background-heavy batches take the
+    # width-1 movable-slot passes. Both sides of the threshold are a
+    # pure function of the batch's padded shape, so every ward of one
+    # call follows one regime and B = 1 replays it exactly.
+    mode = "round" if 2 * mov_idx.shape[1] >= n_max else "pass"
     assign, totals, _ = _tabu_run_batched(
-        assign0, rel, w, proc, trans, movable, np.int32(max_rounds),
-        busy_c, busy_e, objective, greedy_init=initial is None)
+        assign0, rel, w, proc, trans, movable, mov_idx, mov_ok,
+        np.int32(max_rounds), busy_c, busy_e, objective,
+        greedy_init=initial is None, mode=mode)
     assign = np.asarray(assign)
     return (np.asarray(totals, np.float64),
             [assign[b, :sizes[b]] for b in range(B)])
@@ -689,7 +889,7 @@ def tabu_search_jax(jobs: Sequence[JobSpec],
                     *, max_rounds: int | None = None,
                     objective: str = "weighted",
                     machines_per_tier: Tuple[int, int] = (1, 1),
-                    busy_until=None, frozen=None):
+                    busy_until=None, frozen=None, reserved=None):
     """Fully-jitted Algorithm-2 neighbourhood search. Returns
     (best objective value, best assignment as an (n,) int array).
 
@@ -711,7 +911,8 @@ def tabu_search_jax(jobs: Sequence[JobSpec],
         machines_per_tier=(int(machines_per_tier[0]),
                            int(machines_per_tier[1])),
         busy_until=None if busy_until is None else [busy_until],
-        frozen=None if frozen is None else [frozen])
+        frozen=None if frozen is None else [frozen],
+        reserved=None if reserved is None else [reserved])
     return float(vals[0]), assigns[0]
 
 

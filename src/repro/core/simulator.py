@@ -12,6 +12,15 @@ see DESIGN.md §1):
   * shared machines may start busy: ``busy_until`` gives each machine's
     initial free time (DESIGN.md §7 — online replanning scores candidate
     schedules against machines already occupied by committed jobs)
+  * shared machines may carry RESERVED INTERVALS (``reserved``,
+    DESIGN.md §12): committed background occupancy that enters the FIFO
+    queue exactly like a frozen job — it holds a machine for its
+    processing time at its queue position and its (weighted) response
+    counts toward the objective — but is not part of the instance's
+    jobs/assignment, so a search can never move it. Queue ties between a
+    job and a reservation go to the job (a reservation behaves like a
+    job appended after the instance's own jobs, which is how the frozen
+    phantom-job construction it replaces ordered them).
 """
 from __future__ import annotations
 
@@ -48,6 +57,48 @@ class JobSpec:
 
 
 @dataclass(frozen=True)
+class Reservation:
+    """Committed background occupancy on ONE shared tier (DESIGN.md §12).
+
+    The interval-reservation replacement for frozen phantom jobs: a
+    reservation is queue-active (it joins the tier's FIFO queue at
+    (arrival, release) and holds a machine for ``proc``), contributes
+    ``weight * (end - release)`` to the weighted objective (and its
+    response/end to the unweighted/last objectives) so planners price the
+    delay they inflict on it — but it is not a job of the instance, so no
+    search can ever reassign it. Ties against real jobs at equal
+    (arrival, release) dispatch the job first; ties among reservations
+    keep list order — both exactly the order the frozen-phantom
+    construction (jobs + appended background) produced.
+    """
+    arrival: float                   # when its data reaches the tier
+    proc: float                      # processing time on the tier
+    release: float                   # FIFO tiebreak + response baseline
+    weight: float = 0.0              # objective contribution (0: occupancy
+                                     # only)
+
+
+def _resv_map(reserved, allowed=()) -> Dict[str, List[Tuple[int,
+                                                            "Reservation"]]]:
+    """-> {tier: [(input position, Reservation)]} in dispatch order
+    (sorted by (arrival, release), stable — input order breaks ties),
+    validating tier names. ``allowed``: tiers reservations may name
+    (shared tiers only). Results keep the input position so callers can
+    report timings aligned with the caller's lists."""
+    out: Dict[str, List[Tuple[int, Reservation]]] = {}
+    for tier, vals in (reserved or {}).items():
+        if tier not in allowed:
+            raise ValueError(
+                f"reservations may only name shared tiers {list(allowed)}, "
+                f"got {tier!r}")
+        rs = list(enumerate(vals))
+        if rs:
+            out[tier] = sorted(rs, key=lambda kr: (kr[1].arrival,
+                                                   kr[1].release, kr[0]))
+    return out
+
+
+@dataclass(frozen=True)
 class ScheduledJob:
     job: JobSpec
     machine: str
@@ -70,9 +121,17 @@ def schedule_objective(sched, objective: str = "weighted") -> float:
 @dataclass(frozen=True)
 class Schedule:
     entries: List[ScheduledJob]
-    weighted_sum: float              # eq. (5): sum w_i (E_i - R_i)
+    weighted_sum: float              # eq. (5): sum w_i (E_i - R_i) — when
+                                     # the instance carried reservations,
+                                     # INCLUDES their contributions (the
+                                     # objective a search prices, §12)
     unweighted_sum: float            # what the paper's Table VII reports
     last_end: float                  # "Last Response Time"
+    # (arrival, start, end) per input reservation, {tier: list aligned
+    # with the reserved= argument's input lists} — online fleet
+    # replanning re-times other wards' commitments from this (§12)
+    reserved_times: Dict[str, List[Tuple[float, float, float]]] | None \
+        = None
 
     def assignment(self) -> List[str]:
         return [e.machine for e in self.entries]
@@ -116,19 +175,30 @@ def _fifo_pool(items, free: List[float]):
 
 def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
              machines_per_tier: Mapping[str, int] | None = None,
-             busy_until: Mapping[str, Sequence[float]] | None = None
+             busy_until: Mapping[str, Sequence[float]] | None = None,
+             reserved: Mapping[str, Sequence[Reservation]] | None = None
              ) -> Schedule:
     """Evaluate a fixed job->tier assignment under the C1-C5 semantics.
 
     busy_until: optional {tier: [machine free times]} — shared machines
     already occupied by previously committed jobs (DESIGN.md §7). A job
     cannot start on a machine before that machine's entry.
+    reserved: optional {tier: [Reservation]} — committed background
+    occupancy merged into the shared FIFO queues (DESIGN.md §12). The
+    returned sums include reservation responses (jobs first in index
+    order, then cloud reservations, then edge reservations — exactly the
+    frozen-phantom accumulation order this replaces), and the returned
+    ``reserved_times`` reports each reservation's (arrival, start, end)
+    aligned with the input lists.
     """
     if len(jobs) != len(assignment):
         raise ValueError(f"{len(jobs)} jobs but {len(assignment)} "
                          f"assignment entries")
     machines_per_tier = machines_per_tier or {CC: 1, ES: 1}
+    resv = _resv_map(reserved, allowed=(CC, ES))
     entries: List[ScheduledJob | None] = [None] * len(jobs)
+    resv_times: Dict[str, List[Tuple[float, float, float]]] = {
+        tier: [(0.0, 0.0, 0.0)] * len(rs) for tier, rs in resv.items()}
 
     # private tier: no queueing
     for idx, (job, tier) in enumerate(zip(jobs, assignment)):
@@ -137,18 +207,27 @@ def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
             entries[idx] = ScheduledJob(job, ED, arr, arr,
                                         arr + job.proc[ED])
 
-    # shared tiers: FIFO by (arrival, release, index) over a free-time heap
+    # shared tiers: FIFO by (arrival, release, kind, index) over a
+    # free-time heap — kind 0 = the instance's own jobs, kind 1 =
+    # reservations, so ties dispatch the job first (§12)
     for tier in (CC, ES):
         queue = sorted(
-            (i for i, t in enumerate(assignment) if t == tier),
-            key=lambda i: (jobs[i].release + jobs[i].trans[tier],
-                           jobs[i].release, i))
+            [((jobs[i].release + jobs[i].trans[tier], jobs[i].release,
+               0, i), i) for i, t in enumerate(assignment) if t == tier]
+            + [((r.arrival, r.release, 1, k), ~pos)
+               for k, (pos, r) in enumerate(resv.get(tier, ()))])
         free = machine_free_times(busy_until, tier,
                                   machines_per_tier.get(tier, 1))
-        for i, (arr, start, end) in zip(queue, _fifo_pool(
-                ((jobs[i].release + jobs[i].trans[tier], jobs[i].proc[tier])
-                 for i in queue), free)):
-            entries[i] = ScheduledJob(jobs[i], tier, arr, start, end)
+        rs = resv.get(tier, ())
+        timed = _fifo_pool(
+            (((jobs[i].release + jobs[i].trans[tier], jobs[i].proc[tier])
+              if i >= 0 else (key[0], rs[key[3]][1].proc))
+             for key, i in queue), free)
+        for (key, i), (arr, start, end) in zip(queue, timed):
+            if i >= 0:
+                entries[i] = ScheduledJob(jobs[i], tier, arr, start, end)
+            else:
+                resv_times[tier][~i] = (arr, start, end)
 
     done = [e for e in entries if e is not None]
     if len(done) != len(jobs):
@@ -157,8 +236,20 @@ def simulate(jobs: Sequence[JobSpec], assignment: Sequence[str],
     weighted = sum(e.job.weight * e.response for e in done)
     unweighted = sum(e.response for e in done)
     last = max(e.end for e in done) if done else 0.0
+    # reservation contributions accumulate in INPUT order (cloud list,
+    # then edge list) — the order the frozen-phantom construction appended
+    # them, so objectives stay bit-identical to that path
+    for tier in (CC, ES):
+        for pos, r in enumerate((reserved or {}).get(tier) or ()):
+            end = resv_times[tier][pos][2]
+            resp = end - r.release
+            weighted += r.weight * resp
+            unweighted += resp
+            if end > last:
+                last = end
     return Schedule(entries=done, weighted_sum=weighted,
-                    unweighted_sum=unweighted, last_end=last)
+                    unweighted_sum=unweighted, last_end=last,
+                    reserved_times=resv_times or None)
 
 
 # --------------------------------------------------- fleet-true evaluation
@@ -170,9 +261,15 @@ class FleetSchedule:
     unlike B independent `simulate` calls, which silently double-book the
     shared servers."""
     wards: List[Schedule]            # per-ward entries with fleet-true times
-    weighted_sum: float
-    unweighted_sum: float
-    last_end: float
+    weighted_sum: float              # fleet totals INCLUDE reservation
+    unweighted_sum: float            # contributions (§12) — reservations
+    last_end: float                  # belong to no ward's Schedule
+    # (arrival, start, end) per input reservation for the SHARED pools /
+    # the per-ward pools, aligned with the reserved=/ward_reserved= input
+    reserved_times: Dict[str, List[Tuple[float, float, float]]] | None \
+        = None
+    ward_reserved_times: List[Dict[str, List[Tuple[float, float, float]]]] \
+        | None = None
 
     def objective(self, objective: str = "weighted") -> float:
         return schedule_objective(self, objective)
@@ -204,7 +301,9 @@ def simulate_fleet(ward_jobs: Sequence[Sequence[JobSpec]],
                    machines_per_tier=None,
                    busy_until: Mapping[str, Sequence[float]] | None = None,
                    ward_busy_until=None,
-                   shared_tiers: Tuple[str, ...] = (CC,)) -> FleetSchedule:
+                   shared_tiers: Tuple[str, ...] = (CC,),
+                   reserved: Mapping[str, Sequence[Reservation]] | None = None,
+                   ward_reserved=None) -> FleetSchedule:
     """Evaluate a JOINT multi-ward plan under C1-C5 on the real fleet.
 
     Machine pools (DESIGN.md §9): every tier in ``shared_tiers`` (default:
@@ -222,6 +321,12 @@ def simulate_fleet(ward_jobs: Sequence[Sequence[JobSpec]],
     per-ward pools.
     shared_tiers: which of (cloud, edge) are metropolitan-shared; the
     private device tier cannot be shared.
+    reserved: {tier: [Reservation]} committed background occupancy merged
+    into the SHARED pools' queues (DESIGN.md §12); ward_reserved is the
+    per-ward-pool analog (same channel split as busy_until). Reservation
+    responses count toward the fleet totals (they belong to no ward) and
+    their timings come back in ``reserved_times`` aligned with the input
+    lists (shared tiers; per-ward pools report under ``ward_reserved_times``).
     """
     B = len(ward_jobs)
     if len(ward_assignments) != B:
@@ -252,6 +357,19 @@ def simulate_fleet(ward_jobs: Sequence[Sequence[JobSpec]],
         raise ValueError(
             f"ward_busy_until names shared tiers {stray}; the shared "
             f"pools' occupancy goes in busy_until")
+    # reservations use the same channel split: `reserved` may only name
+    # the shared pools, `ward_reserved` only the per-ward pools
+    resv = _resv_map(reserved, allowed=tuple(shared_tiers))
+    wrs = [None] * B if ward_reserved is None else list(ward_reserved)
+    if len(wrs) != B:
+        raise ValueError(f"{len(wrs)} ward reservation maps for {B} wards")
+    per_ward_shared = tuple(t for t in _SHARED if t not in shared_tiers)
+    ward_resv = [_resv_map(wr, allowed=per_ward_shared) for wr in wrs]
+    resv_times: Dict[str, List[Tuple[float, float, float]]] = {
+        tier: [(0.0, 0.0, 0.0)] * len(rs) for tier, rs in resv.items()}
+    ward_resv_times: List[Dict[str, List[Tuple[float, float, float]]]] = [
+        {tier: [(0.0, 0.0, 0.0)] * len(rs) for tier, rs in rm.items()}
+        for rm in ward_resv]
 
     entries: List[List[ScheduledJob | None]] = [
         [None] * len(jobs) for jobs in ward_jobs]
@@ -264,18 +382,31 @@ def simulate_fleet(ward_jobs: Sequence[Sequence[JobSpec]],
                 entries[b][i] = ScheduledJob(job, ED, arr, arr,
                                              arr + job.proc[ED])
 
-    def run_pool(tier: str, members, free: List[float]) -> None:
-        """members: (b, i) pairs; dispatches the pool's merged queue."""
-        queue = sorted(members, key=lambda bi: (
-            ward_jobs[bi[0]][bi[1]].release
-            + ward_jobs[bi[0]][bi[1]].trans[tier],
-            ward_jobs[bi[0]][bi[1]].release, bi))
+    def run_pool(tier: str, members, free: List[float],
+                 rs=(), times=None) -> None:
+        """members: (b, i) pairs; dispatches the pool's merged queue with
+        the pool's reservations ``rs`` ([(input pos, Reservation)] in
+        dispatch order — §12: a tie on (arrival, release) goes to the
+        job). Writes reservation (arrival, start, end) into ``times`` at
+        the input position."""
+        recs = sorted(
+            [((ward_jobs[b][i].release + ward_jobs[b][i].trans[tier],
+               ward_jobs[b][i].release, 0, (b, i)), None)
+             for b, i in members]
+            + [((r.arrival, r.release, 1, k), (pos, r))
+               for k, (pos, r) in enumerate(rs)])
         timed = _fifo_pool(
-            ((ward_jobs[b][i].release + ward_jobs[b][i].trans[tier],
-              ward_jobs[b][i].proc[tier]) for b, i in queue), free)
-        for (b, i), (arr, start, end) in zip(queue, timed):
-            entries[b][i] = ScheduledJob(ward_jobs[b][i], tier, arr,
-                                         start, end)
+            ((key[0],
+              rp[1].proc if rp is not None
+              else ward_jobs[key[3][0]][key[3][1]].proc[tier])
+             for key, rp in recs), free)
+        for (key, rp), (arr, start, end) in zip(recs, timed):
+            if rp is None:
+                b, i = key[3]
+                entries[b][i] = ScheduledJob(ward_jobs[b][i], tier, arr,
+                                             start, end)
+            else:
+                times[rp[0]] = (arr, start, end)
 
     for tier in _SHARED:
         if tier in shared_tiers:
@@ -286,14 +417,18 @@ def simulate_fleet(ward_jobs: Sequence[Sequence[JobSpec]],
                       for i, t in enumerate(ward_assignments[b])
                       if t == tier],
                      machine_free_times(busy_until, tier,
-                                        mpts[0].get(tier, 1)))
+                                        mpts[0].get(tier, 1)),
+                     rs=resv.get(tier, ()),
+                     times=resv_times.get(tier))
         else:
             for b in range(B):
                 run_pool(tier,
                          [(b, i) for i, t in enumerate(ward_assignments[b])
                           if t == tier],
                          machine_free_times(busys[b], tier,
-                                            mpts[b].get(tier, 1)))
+                                            mpts[b].get(tier, 1)),
+                         rs=ward_resv[b].get(tier, ()),
+                         times=ward_resv_times[b].get(tier))
 
     wards = []
     for b, jobs in enumerate(ward_jobs):
@@ -307,11 +442,36 @@ def simulate_fleet(ward_jobs: Sequence[Sequence[JobSpec]],
             weighted_sum=sum(e.job.weight * e.response for e in done),
             unweighted_sum=sum(e.response for e in done),
             last_end=max((e.end for e in done), default=0.0)))
+    w_tot = sum(s.weighted_sum for s in wards)
+    u_tot = sum(s.unweighted_sum for s in wards)
+    last = max((s.last_end for s in wards), default=0.0)
+    # reservation contributions in input order: shared pools (cloud then
+    # edge), then per-ward pools in ward order
+    for tier in _SHARED:
+        for pos, r in enumerate((reserved or {}).get(tier) or ()):
+            end = resv_times[tier][pos][2]
+            resp = end - r.release
+            w_tot += r.weight * resp
+            u_tot += resp
+            if end > last:
+                last = end
+    for b, wr in enumerate(wrs):
+        for tier in _SHARED:
+            for pos, r in enumerate((wr or {}).get(tier) or ()):
+                end = ward_resv_times[b][tier][pos][2]
+                resp = end - r.release
+                w_tot += r.weight * resp
+                u_tot += resp
+                if end > last:
+                    last = end
     return FleetSchedule(
         wards=wards,
-        weighted_sum=sum(s.weighted_sum for s in wards),
-        unweighted_sum=sum(s.unweighted_sum for s in wards),
-        last_end=max((s.last_end for s in wards), default=0.0))
+        weighted_sum=w_tot,
+        unweighted_sum=u_tot,
+        last_end=last,
+        reserved_times=resv_times or None,
+        ward_reserved_times=(ward_resv_times
+                             if any(ward_resv_times) else None))
 
 
 # ------------------------------------------------- incremental evaluation
@@ -340,13 +500,21 @@ class ScheduleState:
 
     def __init__(self, jobs: Sequence[JobSpec], assignment: Sequence[str],
                  machines_per_tier: Mapping[str, int] | None = None,
-                 busy_until: Mapping[str, Sequence[float]] | None = None):
+                 busy_until: Mapping[str, Sequence[float]] | None = None,
+                 reserved: Mapping[str, Sequence[Reservation]] | None = None):
         if len(jobs) != len(assignment):
             raise ValueError(f"{len(jobs)} jobs but {len(assignment)} "
                              f"assignment entries")
         self.jobs = list(jobs)
         self.assign = list(assignment)
         self.machines = dict(machines_per_tier or {CC: 1, ES: 1})
+        # reservations never move, so each shared tier keeps its dispatch-
+        # ordered (arrival, release, proc, weight) rows once; _sim_shared
+        # merges them into every FIFO pass (§12)
+        self.reserved = {t: list(v) for t, v in (reserved or {}).items()}
+        _rm = _resv_map(reserved, allowed=_SHARED)
+        self._resv = {t: [(r.arrival, r.release, r.proc, r.weight)
+                          for _, r in _rm.get(t, ())] for t in _SHARED}
         self.busy = {t: tuple(machine_free_times(busy_until, t,
                                                  self.machines.get(t, 1)))
                      for t in _SHARED}
@@ -395,11 +563,19 @@ class ScheduleState:
         Returns (ends aligned with members, (weighted, unweighted, last)).
         Identical machine semantics to ``simulate``: a free-time heap of
         ``machines[tier]`` servers, start = max(arrival, earliest free);
-        the single-server case runs heap-free.
+        the single-server case runs heap-free. The tier's reservations are
+        merged into the walk by (arrival, release) — a reservation at an
+        exact (arrival, release) tie with a job dispatches after it — and
+        their (weighted) responses accumulate into the stats in merged
+        queue order, so the stats match the frozen-phantom queue this
+        replaces bit-for-bit.
         """
         rel, wgt, proc = self._rel, self._w, self._proc[tier]
         m = self.machines.get(tier, 1)
         busy = self.busy[tier]
+        rs = self._resv[tier]
+        nr = len(rs)
+        ri = 0
         ends: List[float] = []
         append = ends.append
         w = u = last = 0.0
@@ -407,28 +583,67 @@ class ScheduleState:
             free = busy[0]
             for key, i in members:
                 arr = key[0]
+                while ri < nr and (rs[ri][0], rs[ri][1]) < (arr, key[1]):
+                    ra, rr, rp, rw = rs[ri]
+                    start = ra if ra > free else free
+                    free = e = start + rp
+                    resp = e - rr
+                    w += rw * resp
+                    u += resp
+                    ri += 1
                 start = arr if arr > free else free
                 free = e = start + proc[i]
                 append(e)
                 resp = e - rel[i]
                 w += wgt[i] * resp
                 u += resp
-            last = free if ends else 0.0
+            while ri < nr:
+                ra, rr, rp, rw = rs[ri]
+                start = ra if ra > free else free
+                free = e = start + rp
+                resp = e - rr
+                w += rw * resp
+                u += resp
+                ri += 1
+            last = free if (ends or nr) else 0.0
         else:
             heap = list(busy)
             heapq.heapify(heap)
-            for key, i in members:
-                arr = key[0]
+
+            def dispatch(arr, p):
                 avail = heapq.heappop(heap)
                 start = arr if arr > avail else avail
-                e = start + proc[i]
+                e = start + p
                 heapq.heappush(heap, e)
+                return e
+
+            for key, i in members:
+                arr = key[0]
+                while ri < nr and (rs[ri][0], rs[ri][1]) < (arr, key[1]):
+                    ra, rr, rp, rw = rs[ri]
+                    e = dispatch(ra, rp)
+                    resp = e - rr
+                    w += rw * resp
+                    u += resp
+                    if e > last:
+                        last = e
+                    ri += 1
+                e = dispatch(arr, proc[i])
                 append(e)
                 resp = e - rel[i]
                 w += wgt[i] * resp
                 u += resp
                 if e > last:
                     last = e
+            while ri < nr:
+                ra, rr, rp, rw = rs[ri]
+                e = dispatch(ra, rp)
+                resp = e - rr
+                w += rw * resp
+                u += resp
+                if e > last:
+                    last = e
+                ri += 1
         return ends, (w, u, last)
 
     def _shared_move_stats(self, tier: str, k: int, insert: bool):
@@ -518,4 +733,5 @@ class ScheduleState:
         reported sums match the reference evaluator bit-for-bit)."""
         return simulate(self.jobs, self.assign,
                         machines_per_tier=self.machines,
-                        busy_until=self.busy)
+                        busy_until=self.busy,
+                        reserved=self.reserved or None)

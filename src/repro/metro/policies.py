@@ -40,7 +40,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence
 
 from repro.core import scheduler
-from repro.core.simulator import JobSpec
+from repro.core.simulator import JobSpec, Reservation
 from repro.core.tiers import CC, ED, ES
 
 # sentinel decision: drop the job instead of placing it on a tier (the
@@ -129,50 +129,49 @@ class TabuPolicy:
     replans_on_fleet_events: bool = True
 
     @staticmethod
-    def _augment(req: ReplanRequest):
-        """-> (jobs, initial, frozen) with the other wards' unstarted
-        cloud commitments as frozen background (`online_schedule_fleet`'s
-        view — ward-local decisions, fleet-true queueing)."""
+    def _reservations(req: ReplanRequest):
+        """-> ({tier: [Reservation]} | None, initial | None) with the
+        other wards' unstarted cloud commitments as interval reservations
+        (DESIGN.md §12 — `online_schedule_fleet`'s view: ward-local
+        decisions, fleet-true queueing, no frozen phantom rows for the
+        kernel to carry)."""
         bg = list(req.background or ())
         if not bg:
-            return list(req.shifted), None, None
-        jobs = list(req.shifted) + bg
-        initial = [t if t is not None else ED for t in req.current] \
-            + [CC] * len(bg)
-        return jobs, initial, [False] * len(req.shifted) + [True] * len(bg)
+            return None, None
+        resv = {CC: [Reservation(arrival=s.release + s.trans.get(CC, 0.0),
+                                 proc=s.proc[CC], release=s.release,
+                                 weight=s.weight) for s in bg]}
+        return resv, [t if t is not None else ED for t in req.current]
 
     def decide(self, requests, now):
-        n_own = [len(req.shifted) for req in requests]
         if len(requests) == 1:
             req = requests[0]
-            jobs, initial, frozen = self._augment(req)
+            resv, initial = self._reservations(req)
             plan = scheduler.search(
-                jobs, initial=initial, frozen=frozen,
+                list(req.shifted), initial=initial, reserved=resv,
                 max_count=self.max_count,
                 jax_threshold=self.jax_threshold,
                 machines_per_tier=req.machines_per_tier,
                 busy_until=req.busy)
-            return [plan.assignment()[:n_own[0]]]
-        augmented = [self._augment(req) for req in requests]
-        if any(init is not None for _, init, _ in augmented):
+            return [plan.assignment()]
+        pairs = [self._reservations(req) for req in requests]
+        if any(init is not None for _, init in pairs):
             # the batched backend wants initials for all wards or none
-            augmented = [
-                (jobs,
-                 init if init is not None
-                 else [t if t is not None else ED for t in req.current],
-                 fr if fr is not None else [False] * len(jobs))
-                for (jobs, init, fr), req in zip(augmented, requests)]
+            inits = [init if init is not None
+                     else [t if t is not None else ED for t in req.current]
+                     for (_, init), req in zip(pairs, requests)]
+        else:
+            inits = None
         plans = scheduler.search_batched(
-            [jobs for jobs, _, _ in augmented], max_count=self.max_count,
+            [list(req.shifted) for req in requests],
+            max_count=self.max_count,
             machines_per_tier=[req.machines_per_tier for req in requests],
             busy_until=[req.busy for req in requests],
-            initial=[init for _, init, _ in augmented]
-            if augmented[0][1] is not None else None,
-            frozen=[fr for _, _, fr in augmented]
-            if augmented[0][2] is not None else None,
+            initial=inits,
+            reserved=[resv for resv, _ in pairs]
+            if any(resv is not None for resv, _ in pairs) else None,
             min_batch=self.min_batch, jax_threshold=self.jax_threshold)
-        return [plan.assignment()[:n]
-                for plan, n in zip(plans, n_own)]
+        return [plan.assignment() for plan in plans]
 
 
 @dataclass

@@ -410,3 +410,69 @@ class TestContentionGate:
         compare = self._compare()
         committed, _ = self._reports()
         assert compare(committed, {"contention": {}}) == []
+
+
+# ------------------------------------ interval contention regression gate
+class TestContentionIntervalGate:
+    """check_regression.py §12 interval-path logic (no bench run)."""
+
+    def _compare(self):
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                        os.pardir, "benchmarks"))
+        try:
+            from check_regression import compare
+        finally:
+            sys.path.pop(0)
+        return compare
+
+    def _reports(self):
+        base = {"contention_interval": {
+            "gap_closed": 0.95, "improvement_vs_naive": 10.0,
+            "wards_per_s": 5.0, "fraction_of_batched": 0.03,
+            "parity_with_phantom": True,
+            "compiled_shapes": {"size": 2, "hits": 10, "misses": 2,
+                                "evictions": 0}}}
+        import copy
+        return base, copy.deepcopy(base)
+
+    def test_identical_passes(self):
+        compare = self._compare()
+        committed, fresh = self._reports()
+        assert compare(committed, fresh) == []
+
+    def test_throughput_regression_fails(self):
+        compare = self._compare()
+        committed, fresh = self._reports()
+        fresh["contention_interval"]["wards_per_s"] = 1.0  # -80%
+        assert any("contention_interval/wards_per_s" in p
+                   for p in compare(committed, fresh))
+
+    def test_batched_ratio_regression_fails(self):
+        """fraction_of_batched is the committed "fleet sweeps at §8
+        batched speeds" claim — falling far behind the independent
+        batched floor fails even if absolute wards/s still passes."""
+        compare = self._compare()
+        committed, fresh = self._reports()
+        fresh["contention_interval"]["fraction_of_batched"] = 0.001
+        assert any("fraction_of_batched" in p
+                   for p in compare(committed, fresh))
+
+    def test_parity_break_fails(self):
+        """parity_with_phantom is a hard invariant: tolerance never
+        excuses the interval background diverging from the oracle."""
+        compare = self._compare()
+        committed, fresh = self._reports()
+        fresh["contention_interval"]["parity_with_phantom"] = False
+        assert any("parity_with_phantom" in p
+                   for p in compare(committed, fresh, tolerance=0.99))
+
+    def test_eviction_fails(self):
+        compare = self._compare()
+        committed, fresh = self._reports()
+        fresh["contention_interval"]["compiled_shapes"]["evictions"] = 3
+        assert any("evictions" in p for p in compare(committed, fresh))
+
+    def test_missing_section_is_not_gated(self):
+        compare = self._compare()
+        committed, _ = self._reports()
+        assert compare(committed, {}) == []

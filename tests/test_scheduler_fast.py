@@ -209,18 +209,21 @@ class TestSearchDispatch:
 # ------------------------------------------------- compiled-shape dispatch
 class TestCompiledShapeCache:
     def test_second_same_shape_call_uses_jax(self, monkeypatch):
-        """A CPU `search` whose (n, fleet, objective) shape an earlier
-        call already compiled dispatches to the jitted backend
-        (ROADMAP: repeating replans stop paying Python-path costs)."""
+        """A CPU `search` whose BUCKETED (rows, movable, fleet,
+        objective) shape an earlier call already compiled dispatches to
+        the jitted backend (ROADMAP: repeating replans stop paying
+        Python-path costs) — and the §12 bucketing means every size in
+        the same 16-slot bucket rides the one compiled kernel, so metro
+        load's per-event size drift keeps hitting."""
         monkeypatch.setattr(scheduler, "_COMPILED_SHAPES", set())
         calls = []
-        real = scheduler_jax.tabu_search_jax
+        real = scheduler_jax.tabu_search_batched
 
         def spy(*args, **kw):
             calls.append(kw.get("machines_per_tier"))
             return real(*args, **kw)
 
-        monkeypatch.setattr(scheduler_jax, "tabu_search_jax", spy)
+        monkeypatch.setattr(scheduler_jax, "tabu_search_batched", spy)
         jobs = _random_jobs(np.random.default_rng(0), 9)
         mpt = {CC: 2, ES: 1}
 
@@ -236,12 +239,36 @@ class TestCompiledShapeCache:
 
         other = _random_jobs(np.random.default_rng(1), 10)
         scheduler.search(other, machines_per_tier=mpt)
-        assert len(calls) == 2                  # new n: Python path again
+        assert len(calls) == 3                  # same 16-bucket: jitted
+        bigger = _random_jobs(np.random.default_rng(2), 20)
+        scheduler.search(bigger, machines_per_tier=mpt)
+        assert len(calls) == 3                  # new bucket: Python path
         scheduler.search(jobs, machines_per_tier={CC: 1, ES: 1})
-        assert len(calls) == 2                  # new fleet: Python path
+        assert len(calls) == 3                  # new fleet: Python path
         scheduler.search(jobs, machines_per_tier=mpt,
                          objective="unweighted")
-        assert len(calls) == 2                  # new objective: Python
+        assert len(calls) == 3                  # new objective: Python
+
+    def test_shape_stats_and_cap(self, monkeypatch):
+        """`compiled_shape_stats` counts hits/misses, and a miss at the
+        cap evicts the whole cache instead of growing without bound."""
+        monkeypatch.setattr(scheduler, "_COMPILED_SHAPES", set())
+        monkeypatch.setattr(scheduler, "_SHAPE_STATS",
+                            {"hits": 0, "misses": 0, "evictions": 0})
+        jobs = _random_jobs(np.random.default_rng(0), 9)
+        scheduler.search(jobs, jax_threshold=0)       # miss, compiles
+        scheduler.search(jobs, jax_threshold=0)       # hit
+        stats = scheduler.compiled_shape_stats()
+        assert stats["size"] == 1
+        assert stats["misses"] == 1 and stats["hits"] == 1
+        assert stats["evictions"] == 0
+
+        monkeypatch.setattr(scheduler, "_COMPILED_SHAPES_CAP", 1)
+        scheduler.search(jobs, jax_threshold=0,
+                         objective="unweighted")      # miss AT cap
+        stats = scheduler.compiled_shape_stats()
+        assert stats["evictions"] == 1
+        assert stats["size"] == 1                     # cleared, re-added
 
 
 # ----------------------------------------- batched initial/frozen threading
