@@ -47,7 +47,14 @@ hardware — regenerate the baseline when the CI host changes):
     the shedding policy's ``critical_improvement_shed``; plus hard
     ranking invariants — whenever the committed baseline shows a policy
     winning a pack (improvement > 1), the fresh run must not show it
-    losing (<= 1), whatever the tolerance.
+    losing (<= 1), whatever the tolerance;
+  * metro_hedging (DESIGN.md §13): ``events_per_s`` of the hedged run
+    plus two HARD ranking invariants whenever a fresh section exists —
+    under the ``fail_slow_tail`` pack the hedged tabu run must strictly
+    beat the unhedged run on BOTH the life-critical miss rate
+    (``critical_improvement_hedge`` > 1; None is vacuous — the unhedged
+    run missed nothing) and the p99 response
+    (``p99_improvement_hedge`` > 1), at any tolerance.
 
 Wall-clock throughput floors (events/s, wards/s, speedups) are prone to
 host-throttling flakes: ``--runs N`` re-measures ONLY the failed
@@ -142,9 +149,20 @@ def _metro_scenario_metrics(report: dict) -> dict:
     return out
 
 
+def _metro_hedging_metrics(report: dict) -> dict:
+    m = report.get("metro_hedging") or {}
+    out = {}
+    for key in ("events_per_s", "critical_improvement_hedge",
+                "p99_improvement_hedge"):
+        if m.get(key):             # None improvement is vacuous: skip
+            out[f"metro_hedging/{key}"] = m[key]
+    return out
+
+
 _METRIC_FNS = (_head_to_head_metrics, _batched_metrics,
                _contention_metrics, _contention_interval_metrics,
-               _metro_metrics, _metro_scenario_metrics)
+               _metro_metrics, _metro_scenario_metrics,
+               _metro_hedging_metrics)
 
 
 def compare(committed: dict, fresh: dict, tolerance: float = 0.30,
@@ -238,6 +256,23 @@ def compare(committed: dict, fresh: dict, tolerance: float = 0.30,
                     f"metro_scenarios/{pack}/{field}: {got:.3g} <= 1 "
                     f"(committed {floor:.3g}; {label} no longer wins "
                     f"this pack)")
+    # hedging ranking invariants (DESIGN.md §13): whenever a fresh
+    # metro_hedging section exists, the hedged tabu run must STRICTLY
+    # beat the unhedged run under fail_slow_tail on BOTH the
+    # life-critical miss rate and p99 response — tolerance never excuses
+    # either loss. A None critical improvement is vacuous (the unhedged
+    # run missed no life-critical deadline: nothing to rescue).
+    mh = fresh.get("metro_hedging") or {}
+    if mh:
+        for field, label in (
+                ("critical_improvement_hedge", "life-critical miss rate"),
+                ("p99_improvement_hedge", "p99 response")):
+            got = mh.get(field)
+            if got is not None and not got > 1.0:
+                problems.append(
+                    f"metro_hedging/{field}: {got:.3g} <= 1 (hedged tabu "
+                    f"no longer beats unhedged on {label} under "
+                    f"fail_slow_tail)")
     return problems
 
 
@@ -264,6 +299,8 @@ def _remeasure(failed_keys) -> dict:
         partial["contention_interval"] = ss.bench_contention_interval()
     if "metro" in sections:
         partial["metro"] = ss.bench_metro()
+    if "metro_hedging" in sections:
+        partial["metro_hedging"] = ss.bench_metro_hedging()
     if packs:
         partial["metro_scenarios"] = ss.bench_metro_scenarios(
             packs=sorted(packs))

@@ -395,6 +395,51 @@ def bench_metro_scenarios(packs=CHAOS_PACKS, seed=0):
     return out
 
 
+def bench_metro_hedging(seed=0):
+    """Tail-tolerant hedging under fail-slow machines (DESIGN.md §13):
+    the `fail_slow_tail` pack — deep slowdown windows crawling the ward
+    edge pools at 3-8% speed, cloud healthy — replayed under tabu-replan
+    with and without the deadline-aware hedging wrapper on identical
+    traces and slowdown windows.
+
+    Guarded: engine throughput of the hedged run (events/s) and two
+    ratios `check_regression.py` holds as HARD ranking invariants at any
+    tolerance — the hedged run must strictly beat the unhedged run on
+    both the life-critical miss rate (`critical_improvement_hedge`) and
+    the p99 response (`p99_improvement_hedge`). The search backend is
+    pinned to the Python path so the committed numbers are
+    call-order-independent (metro.engine's determinism note)."""
+    from repro.launch.serve import run_metro
+
+    def one(hedged):
+        return run_metro(seed=seed, scenario="fail_slow_tail",
+                         policies=("tabu",), verbose=False,
+                         jax_threshold=10 ** 9, hedge=hedged)["tabu"]
+
+    base, hedged = one(False), one(True)
+    return {
+        "seed": seed,
+        "jobs": hedged["completions"] + hedged["shed"],
+        "events_per_s": hedged["events_per_s"],
+        "critical_miss_unhedged": base["critical_miss_rate"],
+        "critical_miss_hedged": hedged["critical_miss_rate"],
+        "critical_improvement_hedge": _ratio(
+            base["critical_miss_rate"], hedged["critical_miss_rate"],
+            base["completions"]),
+        "p99_unhedged": base["p99"],
+        "p99_hedged": hedged["p99"],
+        "p99_improvement_hedge": base["p99"] / hedged["p99"],
+        "p999_unhedged": base["p999"],
+        "p999_hedged": hedged["p999"],
+        "hedges": hedged["hedges"],
+        "hedge_wins": hedged["hedge_wins"],
+        "hedge_rate": hedged["hedge_rate"],
+        "hedge_waste": hedged["hedge_waste"],
+        "event_log_hash_unhedged": base["event_log_hash"],
+        "event_log_hash_hedged": hedged["event_log_hash"],
+    }
+
+
 def bench_online_fleet(seeds=3, wards=4, n=10, cloud_machines=2,
                        edge_machines=2):
     """Online fleet replanning vs the clairvoyant fixed point
@@ -429,7 +474,7 @@ def bench_scheduler_scale(with_online_scenarios: bool = False,
     report = {"bench": "scheduler_scale", "backend": jax.default_backend(),
               "head_to_head": [], "eval_throughput": {}, "quality": {},
               "online": {}, "batched": {}, "contention": {},
-              "contention_interval": {}, "metro": {}}
+              "contention_interval": {}, "metro": {}, "metro_hedging": {}}
 
     # 1) Algorithm-2 head-to-head across implementations and scales
     for row in bench_head_to_head():
@@ -589,6 +634,22 @@ def bench_scheduler_scale(with_online_scenarios: bool = False,
             f"shed_rate={ms['shed_rate_shed']:.3f};"
             f"retries={ms['retries_tabu']};"
             f"events_per_s={ms['events_per_s']:.0f}")
+
+    # 5e) deadline-aware hedging vs fail-slow stragglers (DESIGN.md §13)
+    report["metro_hedging"] = bench_metro_hedging()
+    mh = report["metro_hedging"]
+    rows.append(("metro_hedging", mh["jobs"], 0.0, mh["events_per_s"]))
+    chi = mh["critical_improvement_hedge"]
+    csv.append(
+        f"sched_metro_hedging,0,"
+        f"jobs={mh['jobs']};"
+        f"crit_unhedged={mh['critical_miss_unhedged']:.4f};"
+        f"crit_hedged={mh['critical_miss_hedged']:.4f};"
+        f"crit_improvement={'vacuous' if chi is None else f'{chi:.2f}x'};"
+        f"p99_improvement={mh['p99_improvement_hedge']:.3f}x;"
+        f"hedges={mh['hedges']};wins={mh['hedge_wins']};"
+        f"hedge_waste={mh['hedge_waste']:.1f};"
+        f"events_per_s={mh['events_per_s']:.0f}")
 
     # 6) per-scenario online competitive ratios (slower; gated by --online)
     if with_online_scenarios:

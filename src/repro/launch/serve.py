@@ -246,16 +246,24 @@ def run_wards(wards=4, patients=10, horizon=30.0, seed=0,
 def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
               edge_machines=2, policies=("greedy", "tabu", "fleet"),
               verbose=True, jax_threshold=None, scenario="default",
-              check_determinism=False):
+              check_determinism=False, hedge=False, hedge_factor=1.5,
+              retry_backoff=0.0, max_attempts=None):
     """Metro traffic mode (DESIGN.md §10-§11): streaming patient-episode
     traffic over a ward fleet sharing one metropolitan cloud, replayed
     under each policy on identical traces, failures (drain or crash),
-    degraded-network windows and elastic-capacity events. `scenario`
-    names a chaos pack from `metro.traces.SCENARIO_PACKS`; `wards` and
-    `hours` default to the pack's canonical shape. Prints the policy
-    comparison (p50/p99 response, SLA miss-rate overall / life-critical
-    / shed, per-tier utilisation, engine events/s) and returns
-    {policy: summary dict}.
+    fail-slow slowdown windows, degraded-network windows and
+    elastic-capacity events. `scenario` names a chaos pack from
+    `metro.traces.SCENARIO_PACKS`; `wards` and `hours` default to the
+    pack's canonical shape. Prints the policy comparison (p50/p99
+    response, SLA miss-rate overall / life-critical / shed, per-tier
+    utilisation with the crash-retry and wasted-work counts broken out
+    per tier, engine events/s) and returns {policy: summary dict}.
+
+    hedge=True wraps every policy in the deadline-aware HedgingPolicy
+    and arms the engine's straggler watchdog at `hedge_factor` x the
+    committed proc time (DESIGN.md §13); the table gains hedge/win/
+    hedge-waste columns. retry_backoff / max_attempts bound crash
+    retries (exponential backoff, shed-with-record past the cap).
 
     check_determinism=True replays every policy twice on a fresh engine
     and raises unless the event logs hash identically — the seeded-chaos
@@ -270,7 +278,7 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
     above, nothing here is scored once — schedules are committed event
     by event against the chaos timeline, which is the regime the
     ROADMAP's sustained-load north star asks for."""
-    from repro.metro import make_policy, simulate_metro, traces
+    from repro.metro import HedgingPolicy, make_policy, simulate_metro, traces
 
     if check_determinism and jax_threshold is None:
         jax_threshold = 10 ** 9          # always the Python search path
@@ -289,21 +297,33 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
 
     def one_run(name):
         # a fresh policy per run: policies may carry stream state (the
-        # shedding wrapper's running max weight)
+        # shedding wrapper's running max weight, the hedging wrapper's)
+        pol = make_policy(name, **kwargs.get(name, {}))
+        eng_kw = {}
+        if hedge:
+            pol = HedgingPolicy(inner=pol)
+            eng_kw["hedge_factor"] = hedge_factor
         return simulate_metro(
-            sc.traces, make_policy(name, **kwargs.get(name, {})),
-            machines_per_tier=mpt, failures=sc.failures,
-            scale_events=sc.scales, network_events=sc.network)
+            sc.traces, pol, machines_per_tier=mpt, failures=sc.failures,
+            scale_events=sc.scales, network_events=sc.network,
+            slowdowns=sc.slowdowns, retry_backoff=retry_backoff,
+            max_attempts=max_attempts, **eng_kw)
 
     if verbose:
         kills = sum(f.kill_running for f in sc.failures)
         print(f"metro[{sc.name}]: {wards} wards, {sc.jobs} episode-stage "
               f"jobs, {len(sc.failures)} failures ({kills} crash), "
+              f"{len(sc.slowdowns)} slowdown windows, "
               f"{len(sc.scales)} scale events, {len(sc.network)} network "
-              f"windows, fleet {cloud_machines}c/{edge_machines}e per ward")
+              f"windows, fleet {cloud_machines}c/{edge_machines}e per ward"
+              + (f", hedging at {hedge_factor:g}x" if hedge else ""))
+        hedge_cols = (f" {'hedge':>5s} {'win':>4s} {'hwaste':>6s}"
+                      if hedge else "")
         print(f"{'policy':8s} {'p50':>6s} {'p95':>6s} {'p99':>6s} "
-              f"{'miss%':>6s} {'crit%':>6s} {'shed%':>6s} {'retry':>5s} "
-              f"{'cloud':>6s} {'edge':>6s} {'events/s':>9s}")
+              f"{'p99.9':>6s} {'miss%':>6s} {'crit%':>6s} {'shed%':>6s} "
+              f"{'cloud':>6s} {'rtry':>4s} {'waste':>6s} "
+              f"{'edge':>6s} {'rtry':>4s} {'waste':>6s}"
+              f"{hedge_cols} {'events/s':>9s}")
     out = {}
     for name in policies:
         res = one_run(name)
@@ -320,12 +340,18 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
         out[name] = s
         if verbose:
             util = s["utilization"]
+            rbt, wbt = s["retries_by_tier"], s["wasted_by_tier"]
+            hedge_cells = (f" {s['hedges']:5d} {s['hedge_wins']:4d} "
+                           f"{s['hedge_waste']:6.1f}" if hedge else "")
             print(f"{name:8s} {s['p50']:6.1f} {s['p95']:6.1f} "
-                  f"{s['p99']:6.1f} {s['miss_rate']:6.2%} "
+                  f"{s['p99']:6.1f} {s['p999']:6.1f} "
+                  f"{s['miss_rate']:6.2%} "
                   f"{s['critical_miss_rate']:6.2%} {s['shed_rate']:6.2%} "
-                  f"{s['retries']:5d} "
                   f"{util.get('cloud', 0.0):6.1%} "
+                  f"{rbt.get('cloud', 0):4d} {wbt.get('cloud', 0.0):6.1f} "
                   f"{util.get('edge', 0.0):6.1%} "
+                  f"{rbt.get('edge', 0):4d} {wbt.get('edge', 0.0):6.1f}"
+                  f"{hedge_cells} "
                   f"{s['events_per_s']:9.0f}")
     if verbose and check_determinism:
         print(f"determinism: {len(out)} policies x 2 runs, event logs "
@@ -382,7 +408,21 @@ def main():
                     help="chaos scenario pack for --metro "
                          "(metro.traces.SCENARIO_PACKS: default, "
                          "edge_brownout, mass_casualty_crash, "
-                         "degraded_network, diurnal_day)")
+                         "degraded_network, diurnal_day, fail_slow_tail)")
+    ap.add_argument("--hedge", action="store_true",
+                    help="with --metro: wrap every policy in the "
+                         "deadline-aware hedging wrapper and arm the "
+                         "straggler watchdog (DESIGN.md §13)")
+    ap.add_argument("--hedge-factor", type=float, default=1.5,
+                    help="watchdog threshold: hedge once elapsed runtime "
+                         "exceeds this multiple of the committed proc "
+                         "time (default 1.5)")
+    ap.add_argument("--retry-backoff", type=float, default=0.0,
+                    help="base delay for exponential crash-retry backoff "
+                         "(0 = immediate re-dispatch, the legacy path)")
+    ap.add_argument("--max-attempts", type=int, default=None,
+                    help="cap on attempts per job; past it the job is "
+                         "shed-with-record (default: unbounded)")
     ap.add_argument("--metro-policies", default="greedy,tabu,fleet",
                     help="comma-separated policy list for --metro "
                          "(greedy, tabu, fleet, shed)")
@@ -402,7 +442,10 @@ def main():
                       p for p in args.metro_policies.split(",") if p),
                   jax_threshold=args.jax_threshold,
                   scenario=args.scenario,
-                  check_determinism=args.check_determinism)
+                  check_determinism=args.check_determinism,
+                  hedge=args.hedge, hedge_factor=args.hedge_factor,
+                  retry_backoff=args.retry_backoff,
+                  max_attempts=args.max_attempts)
     elif args.wards > 0:
         run_wards(wards=args.wards, patients=args.patients,
                   horizon=args.horizon, seed=args.seed,

@@ -9,30 +9,36 @@ Three layers over the core scheduling machinery:
     failure / elastic-capacity / degraded-network event streams, and
     the seeded chaos scenario-pack registry (`make_scenario`);
   * `engine`   — a discrete-event loop over arrivals, completions,
-    drain/crash failures, recoveries, scale and network events,
-    maintaining the true fleet occupancy (shared metropolitan cloud
-    pool, per-ward edge pools, private devices) and driving a pluggable
-    `Policy`; crash kills retry through the normal decision path and
-    SHED decisions drop jobs as explicit misses (DESIGN.md §11);
+    drain/crash failures, fail-slow slowdowns, recoveries, scale and
+    network events, maintaining the true fleet occupancy (shared
+    metropolitan cloud pool, per-ward edge pools, private devices) and
+    driving a pluggable `Policy`; crash kills retry through the normal
+    decision path with exponential backoff and a bounded attempt cap,
+    SHED decisions drop jobs as explicit misses (DESIGN.md §11), and a
+    hedge watchdog races backup attempts against stragglers with
+    first-completion-wins cancellation (DESIGN.md §13);
   * `policies` — greedy commit-on-arrival, tabu committed replanning
     (`online_schedule`-style, batched across wards at matching event
     counts via `scheduler.search_batched`), the contention-aware
-    fleet fixed point (`scheduler.search_fleet`), and the
-    saturation-aware shedding wrapper;
-  * `metrics`  — streaming, windowed SLA metrics: p50/p95/p99 response,
-    deadline miss-rate per workload class (shed jobs are explicit
-    misses), crash-retry/wasted-work counters, per-tier utilisation,
-    all O(1) memory over unbounded runs.
+    fleet fixed point (`scheduler.search_fleet`), the saturation-aware
+    shedding wrapper, and the deadline-aware hedging wrapper;
+  * `metrics`  — streaming, windowed SLA metrics: p50/p95/p99/p99.9
+    response (overall and per class), deadline miss-rate per workload
+    class (shed jobs are explicit misses), crash-retry/wasted-work and
+    hedge counters broken out per tier, per-tier utilisation, all O(1)
+    memory over unbounded runs.
 """
 from repro.metro.engine import (FailureEvent, MetroEngine, MetroResult,
-                                NetworkEvent, ScaleEvent, simulate_metro)
+                                NetworkEvent, ScaleEvent, SlowdownEvent,
+                                simulate_metro)
 from repro.metro.metrics import MetroMetrics
-from repro.metro.policies import (SHED, FleetPolicy, GreedyPolicy, Policy,
+from repro.metro.policies import (SHED, FleetPolicy, GreedyPolicy,
+                                  HedgeRequest, HedgingPolicy, Policy,
                                   SheddingPolicy, TabuPolicy, make_policy)
 from repro.metro.traces import SCENARIO_PACKS, Scenario, make_scenario
 
 __all__ = ["FailureEvent", "MetroEngine", "MetroResult", "NetworkEvent",
-           "ScaleEvent", "simulate_metro", "MetroMetrics", "SHED",
-           "FleetPolicy", "GreedyPolicy", "Policy", "SheddingPolicy",
-           "TabuPolicy", "make_policy", "SCENARIO_PACKS", "Scenario",
-           "make_scenario"]
+           "ScaleEvent", "SlowdownEvent", "simulate_metro", "MetroMetrics",
+           "SHED", "FleetPolicy", "GreedyPolicy", "HedgeRequest",
+           "HedgingPolicy", "Policy", "SheddingPolicy", "TabuPolicy",
+           "make_policy", "SCENARIO_PACKS", "Scenario", "make_scenario"]

@@ -37,6 +37,22 @@ prices the degraded uplink (the §7 shifted specs carry scaled
 transmission for any tier the job would re-ship to), while data already
 in flight toward a committed tier keeps its committed arrival.
 
+Fail-slow windows (`SlowdownEvent`, DESIGN.md §13) degrade a machine
+without killing anything: the struck slot serves `factor < 1` work
+units per wall second for the window, in-flight completions and queued
+successors are re-timed through the piecewise rate profile, and
+`capacity_integral` discounts the forgone service. Tail tolerance rides
+on top: with `hedge_factor` set and a policy exposing a `hedge()` hook
+(see `HedgingPolicy`), a watchdog event fires when an in-flight job has
+run `hedge_factor x` its committed proc time — or its committed end
+already misses the deadline — and the policy may dispatch ONE backup
+attempt on another tier. First completion wins; the loser is cancelled
+at the winner's completion instant and its consumed machine-seconds are
+scored as `hedge_waste`. Crash retries are bounded: `retry_backoff`
+delays re-decision exponentially per attempt and `max_attempts` (global
+or per-class) sheds-with-record instead of dispatching a storm. All
+four knobs default OFF, reproducing the PR 6 engine event-for-event.
+
 Completion events are scheduled from commitment end times and validated
 lazily on pop (a replan that re-times a commitment simply strands the
 stale event), the standard DES invalidation scheme — so the event log is
@@ -53,19 +69,22 @@ from __future__ import annotations
 import heapq
 import time
 from dataclasses import dataclass, replace
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Dict, List, Mapping, Optional, Sequence, Set, Tuple,
+                    Union)
 
 from repro.core import online
 from repro.core.simulator import JobSpec, Schedule, ScheduledJob
 from repro.core.tiers import CC, ED, ES
 from repro.metro.metrics import MetroMetrics
-from repro.metro.policies import SHED, Policy, ReplanRequest
+from repro.metro.policies import SHED, HedgeRequest, Policy, ReplanRequest
 
 _INF = float("inf")
 # same-instant ordering: completions first (a machine freeing at t is
-# visible to a replan at t), then fleet/network events, then arrivals
-(_P_COMPLETE, _P_FAIL, _P_SCALE, _P_RECOVER, _P_NET,
- _P_ARRIVE) = 0, 1, 2, 3, 4, 5
+# visible to a replan at t), then fleet/network events (slowdown onsets
+# with failures, window closes with recoveries), then hedge watchdogs
+# (they must see the post-event fleet), then arrivals/backoff retries
+(_P_COMPLETE, _P_FAIL, _P_SLOW, _P_SCALE, _P_RECOVER, _P_SLOWEND,
+ _P_NET, _P_HEDGE, _P_ARRIVE) = range(9)
 # decisions a policy may return per movable job (validated centrally
 # in _decide — not ad hoc per commit branch)
 _DECISIONS = frozenset((CC, ES, ED, SHED))
@@ -105,6 +124,25 @@ class NetworkEvent:
 
 
 @dataclass(frozen=True)
+class SlowdownEvent:
+    """Fail-slow window (DESIGN.md §13): the BUSIEST (latest-free)
+    non-retired machine in `tier`'s pool runs at `factor` (< 1) of
+    nominal speed during [time, time + duration). The struck machine's
+    in-flight job keeps its placement (C2) but its completion — and
+    every queued successor — is re-timed through the piecewise-constant
+    rate profile; overlapping windows on one machine compound by factor
+    product (like network factors). Unlike a failure nothing is lost:
+    the machine delivers `factor` service units per wall second, and
+    `capacity_integral` shaves the forgone (1 - factor) fraction off
+    every up interval the window covers."""
+    time: float
+    tier: str = CC
+    ward: Optional[int] = None           # None = the shared cloud pool
+    duration: float = 20.0
+    factor: float = 0.25
+
+
+@dataclass(frozen=True)
 class ScaleEvent:
     """Elastic capacity: delta > 0 adds machines to the pool at `time`;
     delta < 0 retires the earliest-free ones (each finishes its running
@@ -130,15 +168,70 @@ class _Commit:
 
 class _Slot:
     """One machine with identity: when it joined the pool, until when it
-    is down (inf = retired), and its recorded outage intervals (exact
-    utilisation accounting)."""
-    __slots__ = ("created", "down", "outages", "retired_at")
+    is down (inf = retired), its recorded outage intervals (exact
+    utilisation accounting), and its fail-slow windows
+    (t0, t1, factor)."""
+    __slots__ = ("created", "down", "outages", "slowdowns", "retired_at")
 
     def __init__(self, created: float = 0.0):
         self.created = created
         self.down = created          # not dispatchable before it exists
         self.outages: List[Tuple[float, float]] = []
+        self.slowdowns: List[Tuple[float, float, float]] = []
         self.retired_at: Optional[float] = None
+
+
+def _rate_profile(windows: Sequence[Tuple[float, float, float]],
+                  lo: float, hi: float):
+    """Piecewise-constant service rate of one machine over [lo, hi):
+    yields (seg_start, seg_end, rate) where rate is the product of every
+    fail-slow factor whose window covers the segment. Cut points include
+    all window boundaries inside (lo, hi), so each segment is entirely
+    inside or outside each window."""
+    pts = {lo, hi}
+    for t0, t1, _ in windows:
+        if lo < t0 < hi:
+            pts.add(t0)
+        if lo < t1 < hi:
+            pts.add(t1)
+    cuts = sorted(pts)
+    for a, b in zip(cuts, cuts[1:]):
+        f = 1.0
+        for t0, t1, fac in windows:
+            if t0 <= a and b <= t1:
+                f *= fac
+        yield a, b, f
+
+
+def _work_done(windows: Sequence[Tuple[float, float, float]],
+               t0: float, t1: float) -> float:
+    """Service units a machine delivers over wall interval [t0, t1).
+    With no fail-slow windows this is exactly `t1 - t0` (bit-identical
+    to the pre-fail-slow wall-clock accounting)."""
+    if t1 <= t0:
+        return 0.0
+    if not windows:
+        return t1 - t0
+    return sum(f * (b - a) for a, b, f in _rate_profile(windows, t0, t1))
+
+
+def _finish_time(windows: Sequence[Tuple[float, float, float]],
+                 start: float, work: float) -> float:
+    """Wall-clock instant at which `work` service units started at
+    `start` complete on a machine with the given fail-slow windows.
+    Inverse of `_work_done`; exactly `start + work` when no window
+    exists or all windows closed before `start`."""
+    if not windows or start == _INF or work == _INF:
+        return start + work
+    hi = max(t1 for _, t1, _ in windows)
+    if start >= hi:
+        return start + work
+    for a, b, f in _rate_profile(windows, start, hi):
+        seg = f * (b - a)
+        if work <= seg:
+            return a + work / f
+        work -= seg
+    return hi + work
 
 
 class _Pool:
@@ -152,27 +245,43 @@ class _Pool:
         self.reserved: List[float] = [0.0] * machines
 
     def capacity_integral(self, t_end: float) -> float:
-        """Machine-seconds the pool could have run in [0, t_end]. Outage
-        intervals may overlap (a crash can strike an already-down
-        machine), so they are union-merged before subtracting."""
+        """Machine-seconds of SERVICE the pool could have delivered in
+        [0, t_end]. Outage intervals may overlap (a crash can strike an
+        already-down machine), so they are union-merged before
+        subtracting; fail-slow windows then shave the forgone
+        (1 - rate) fraction off every up segment they cover — the same
+        union-merge treatment, so a window inside an outage is not
+        double-subtracted (DESIGN.md §13)."""
         total = 0.0
         for s in self.slots:
             hi = min(s.retired_at if s.retired_at is not None else t_end,
                      t_end)
             span = max(0.0, hi - s.created)
+            if span == 0.0:
+                total += 0.0
+                continue
             clipped = sorted(
                 (max(d0, s.created), min(d1, hi))
                 for d0, d1 in s.outages if min(d1, hi) > max(d0, s.created))
-            m0 = m1 = None
+            merged: List[List[float]] = []
             for d0, d1 in clipped:
-                if m1 is None or d0 > m1:
-                    if m1 is not None:
-                        span -= m1 - m0
-                    m0, m1 = d0, d1
-                elif d1 > m1:
-                    m1 = d1
-            if m1 is not None:
-                span -= m1 - m0
+                if merged and d0 <= merged[-1][1]:
+                    if d1 > merged[-1][1]:
+                        merged[-1][1] = d1
+                else:
+                    merged.append([d0, d1])
+            for d0, d1 in merged:
+                span -= d1 - d0
+            if s.slowdowns:
+                for a, b, f in _rate_profile(s.slowdowns, s.created, hi):
+                    if f >= 1.0:
+                        continue
+                    seg = b - a
+                    for d0, d1 in merged:
+                        ov = min(b, d1) - max(a, d0)
+                        if ov > 0:
+                            seg -= ov
+                    span -= (1.0 - f) * max(0.0, seg)
             total += max(0.0, span)
         return total
 
@@ -211,6 +320,10 @@ class MetroEngine:
                  failures: Sequence[FailureEvent] = (),
                  scale_events: Sequence[ScaleEvent] = (),
                  network_events: Sequence[NetworkEvent] = (),
+                 slowdowns: Sequence[SlowdownEvent] = (),
+                 hedge_factor: Optional[float] = None,
+                 retry_backoff: float = 0.0,
+                 max_attempts: Union[int, Mapping[str, int], None] = None,
                  metrics: MetroMetrics | None = None):
         mpt = dict(machines_per_tier or {CC: 1, ES: 1})
         self.jobs: List[List[JobSpec]] = [list(t) for t in ward_traces]
@@ -227,6 +340,42 @@ class MetroEngine:
         self.pending: List[List[int]] = [[] for _ in range(self.B)]
         # per-job dispatch-loss count (crash kills); attempts = kills + 1
         self.kills: List[List[int]] = [[0] * len(t) for t in self.jobs]
+        # hedge state: at most ONE backup attempt per job, ever — the
+        # flag persists after resolution so a job is never re-hedged
+        self.hedged: List[List[bool]] = [
+            [False] * len(t) for t in self.jobs]
+        self.hedges: Dict[Tuple[int, int], _Commit] = {}
+        # jobs whose backup was promoted to THE commitment by a crash on
+        # the primary: their eventual completion still scores as a hedge
+        # win (the backup is the machine on the final schedule)
+        self.promoted: Set[Tuple[int, int]] = set()
+        self._hedge_fn = getattr(policy, "hedge", None)
+        if hedge_factor is not None:
+            if not hedge_factor > 1.0:
+                raise ValueError(f"hedge_factor must be > 1 (a watchdog "
+                                 f"at <= 1x proc would fire on healthy "
+                                 f"runs), got {hedge_factor}")
+            if self._hedge_fn is None:
+                raise ValueError(
+                    f"hedge_factor set but policy "
+                    f"{getattr(policy, 'name', '?')!r} has no hedge() "
+                    f"hook; wrap it in HedgingPolicy")
+        self.hedge_factor = hedge_factor
+        if retry_backoff < 0:
+            raise ValueError(f"retry_backoff must be >= 0, "
+                             f"got {retry_backoff}")
+        self.retry_backoff = retry_backoff
+        if isinstance(max_attempts, int):
+            if max_attempts < 1:
+                raise ValueError(f"max_attempts must be >= 1, "
+                                 f"got {max_attempts}")
+        elif max_attempts is not None:
+            max_attempts = dict(max_attempts)
+            bad = {k: v for k, v in max_attempts.items() if v < 1}
+            if bad:
+                raise ValueError(f"per-class max_attempts must be >= 1, "
+                                 f"got {bad}")
+        self.max_attempts = max_attempts
         # active degraded-network factors per shared tier
         self._net: Dict[str, List[float]] = {}
         self.metrics = metrics or MetroMetrics()
@@ -245,6 +394,15 @@ class MetroEngine:
         for ev in scale_events:
             self._pool(ev.tier, ev.ward)
             self._push(ev.time, _P_SCALE, ("scale", ev))
+        for ev in slowdowns:
+            self._pool(ev.tier, ev.ward)      # validate tier/ward early
+            if not 0.0 < ev.factor < 1.0:
+                raise ValueError(f"fail-slow factor must be in (0, 1) — "
+                                 f"1 is healthy, 0 is a failure — "
+                                 f"got {ev}")
+            if not ev.duration > 0:
+                raise ValueError(f"slowdown needs duration > 0, got {ev}")
+            self._push(ev.time, _P_SLOW, ("slow", ev))
         for ev in network_events:
             if ev.tier not in (CC, ES):
                 raise ValueError(f"network events degrade a shared tier's "
@@ -273,21 +431,29 @@ class MetroEngine:
             return self.edges[ward]
         raise ValueError(f"no machine pool on tier {tier!r}")
 
-    def _pool_members(self, pool: _Pool) -> List[Tuple[int, int]]:
+    def _pool_entries(self, pool: _Pool) -> List[
+            Tuple[int, int, _Commit, bool]]:
+        """Every attempt occupying `pool`: primary commitments plus live
+        hedge backups, as (ward, index, commit, is_hedge). A backup is a
+        first-class pool occupant — it queues, delays successors, and
+        can be crash-killed like any commitment."""
         if pool.tier == CC:
             wards: Sequence[int] = range(self.B)
         else:
             wards = [self.edges.index(pool)]
-        return [(b, i) for b in wards
-                for i, c in enumerate(self.commits[b])
-                if c is not None and c.machine == pool.tier]
+        out = [(b, i, c, False) for b in wards
+               for i, c in enumerate(self.commits[b])
+               if c is not None and c.machine == pool.tier]
+        ws = set(wards)
+        out.extend((b, i, h, True) for (b, i), h in self.hedges.items()
+                   if h.machine == pool.tier and b in ws)
+        return out
 
     def _slot_frees(self, pool: _Pool, now: float) -> List[float]:
         """Per-slot next-free times from STARTED commitments + outages —
         what a replan at `now` may not dispatch before."""
         free = [max(s.down, 0.0) for s in pool.slots]
-        for b, i in self._pool_members(pool):
-            c = self.commits[b][i]
+        for _, _, c, _ in self._pool_entries(pool):
             if c.start <= now and c.end > free[c.slot]:
                 free[c.slot] = c.end
         return free
@@ -298,6 +464,41 @@ class MetroEngine:
         matching `online._busy_vectors` / `machine_free_times`)."""
         return [f for f in self._slot_frees(pool, now) if f > now]
 
+    def _watchdog(self, b: int, i: int, c: _Commit, now: float) -> None:
+        """Arm the hedge watchdog for a (re)timed primary commitment:
+        fires at `start + hedge_factor x proc` (elapsed-runtime trigger)
+        or immediately at `start` when the committed end already misses
+        the deadline (negative-slack trigger). Never armed when it could
+        not fire before the committed end — a healthy run on a healthy
+        machine completes first, so the heap stays quiet. Validated
+        lazily on pop like completion events."""
+        if self.hedge_factor is None:
+            return
+        if self.hedged[b][i] or (b, i) in self.hedges:
+            return
+        job = c.job
+        t_w = c.start + self.hedge_factor * job.proc[c.machine]
+        if c.end > job.release + job.deadline:
+            t_w = c.start
+        t_w = max(t_w, now)
+        if t_w < c.end:
+            self._push(t_w, _P_HEDGE, ("hedge", b, i, c.machine, c.start))
+
+    def _attempt_cap(self, job: JobSpec) -> Optional[int]:
+        cap = self.max_attempts
+        if isinstance(cap, dict):
+            return cap.get(job.workload)
+        return cap
+
+    def _elapsed_work(self, b: int, c: _Commit, now: float) -> float:
+        """Service units a partially-run attempt consumed in
+        [c.start, now) on its slot — wall seconds off fail-slow windows,
+        scaled by the active rate inside them."""
+        if c.machine == ED or c.slot < 0:
+            return max(0.0, now - c.start)
+        pool = self.cloud if c.machine == CC else self.edges[b]
+        return _work_done(pool.slots[c.slot].slowdowns, c.start, now)
+
     # ------------------------------------------------------------- replay
     def _replay_pool(self, pool: _Pool, now: float) -> None:
         """Re-dispatch every unstarted commitment of one pool FIFO by
@@ -306,25 +507,29 @@ class MetroEngine:
         untouched (C2); re-timed jobs get fresh completion events."""
         free = self._slot_frees(pool, now)
         queue = []
-        for b, i in self._pool_members(pool):
-            c = self.commits[b][i]
+        for b, i, c, is_hedge in self._pool_entries(pool):
             if c.start > now:
-                queue.append((max(now, c.arrival), c.planned_at, b, i))
+                queue.append((max(now, c.arrival), c.planned_at, b, i,
+                              is_hedge))
         queue.sort()
         heap = list(zip(free, range(len(free))))
         heapq.heapify(heap)
-        for arr, _, b, i in queue:
-            c = self.commits[b][i]
+        for arr, _, b, i, is_hedge in queue:
+            c = self.hedges[(b, i)] if is_hedge else self.commits[b][i]
             avail, k = heapq.heappop(heap)
             start = arr if arr > avail else avail
-            end = start + c.job.proc[pool.tier]
+            end = _finish_time(pool.slots[k].slowdowns, start,
+                               c.job.proc[pool.tier])
             if end == _INF:                          # pragma: no cover
                 raise ValueError(f"{pool.tier} pool has no dispatchable "
                                  f"machine for {c.job.name}")
             heapq.heappush(heap, (end, k))
             if (start, end, k) != (c.start, c.end, c.slot):
                 c.start, c.end, c.slot = start, end, k
-                self._push(end, _P_COMPLETE, ("complete", b, i, end))
+                kind = "hcomplete" if is_hedge else "complete"
+                self._push(end, _P_COMPLETE, (kind, b, i, end))
+                if not is_hedge:
+                    self._watchdog(b, i, c, now)
         pool.reserved = sorted(f for f, _ in heap)
 
     def _replay(self, now: float, edge_wards: Sequence[int] | None = None,
@@ -371,12 +576,19 @@ class MetroEngine:
         # every ward's unstarted cloud commitments, shifted to `now`:
         # ward b's replan sees the other wards' entries as frozen
         # background (queue-active, immovable — DESIGN.md §9)
-        cloud_queue: List[Tuple[int, JobSpec]] = []
+        cloud_queue: List[Tuple[int, int, JobSpec]] = []
         for c in range(self.B):
             for j, cm in enumerate(self.commits[c]):
                 if cm is not None and cm.machine == CC and cm.start > now:
                     cloud_queue.append(
-                        (c, self._shift_spec(self.jobs[c][j], cm, now)))
+                        (c, j, self._shift_spec(self.jobs[c][j], cm, now)))
+        # live backup attempts queue on the cloud too; they are immovable
+        # for EVERY ward (their owner included), hence index -1 so they
+        # land in the owner's background as well
+        for (c, j), hm in self.hedges.items():
+            if hm.machine == CC and hm.start > now:
+                cloud_queue.append(
+                    (c, -1, self._shift_spec(self.jobs[c][j], hm, now)))
         requests: List[ReplanRequest] = []
         for b in wards:
             movable = [i for i in self.pending[b]
@@ -390,6 +602,7 @@ class MetroEngine:
                                         self.commits[b][i], now)
                        for i in movable]
             new = set(fresh.get(b, ()))
+            mov = set(movable)
             requests.append(ReplanRequest(
                 ward=b, movable=movable, shifted=shifted,
                 current=[None if self.commits[b][i] is None
@@ -401,7 +614,8 @@ class MetroEngine:
                           ES: list(self.edges[b].reserved)},
                 machines_per_tier={CC: len(self.cloud.slots),
                                    ES: len(self.edges[b].slots)},
-                background=[spec for c, spec in cloud_queue if c != b]))
+                background=[spec for c, j, spec in cloud_queue
+                            if c != b or j not in mov]))
         if requests:
             decisions = self.policy.decide(requests, now)
             if len(decisions) != len(requests):
@@ -447,6 +661,9 @@ class MetroEngine:
                 self._push(end, _P_COMPLETE, ("complete", b, i, end))
             self.commits[b][i] = _Commit(job, ED, arrival, arrival, end,
                                          slot=-1, planned_at=now)
+            # device runs never stretch, so only the negative-slack
+            # trigger can arm here (projected deadline miss at commit)
+            self._watchdog(b, i, self.commits[b][i], now)
             return
         # shared tiers (decision already validated in _decide): the replay
         # assigns slot and times (start > now placeholder keeps it in the
@@ -466,16 +683,59 @@ class MetroEngine:
         if c is None or self.finished[b][i] or c.end != end or \
                 c.start > now:
             return                                   # stale (re-timed) event
+        self._finish(now, b, i, c, hedge_win=False)
+
+    def _on_hcomplete(self, now: float, b: int, i: int,
+                      end: float) -> None:
+        """A backup attempt finished first: promote it to THE commitment
+        (the final schedule shows the winner), cancel the losing primary
+        at this instant, and score the completion as a hedge win."""
+        h = self.hedges.get((b, i))
+        if h is None or self.finished[b][i] or h.end != end or \
+                h.start > now:
+            return                                   # stale (re-timed) event
+        loser = self.commits[b][i]
+        del self.hedges[(b, i)]
+        self.commits[b][i] = h
+        if loser is not None:                        # pragma: no branch
+            self._cancel(now, b, i, loser)
+        self._finish(now, b, i, h, hedge_win=True)
+
+    def _finish(self, now: float, b: int, i: int, c: _Commit,
+                hedge_win: bool) -> None:
         self.finished[b][i] = True
+        other = self.hedges.pop((b, i), None)
+        if other is not None:
+            # primary won the race: cancel the backup deterministically
+            # at the winner's completion instant
+            self._cancel(now, b, i, other)
         job = c.job
-        response = end - job.release
+        response = c.end - job.release
         self.metrics.record(now, job.workload, response, job.deadline,
-                            c.machine, end - c.start,
+                            c.machine, job.proc[c.machine],
                             attempts=self.kills[b][i] + 1,
-                            weight=job.weight)
+                            weight=job.weight,
+                            hedged=self.hedged[b][i],
+                            hedge_win=hedge_win or
+                            (b, i) in self.promoted)
         self.event_log.append(
-            ("complete", now, b, i, c.machine, c.start, end, response,
+            ("complete", now, b, i, c.machine, c.start, c.end, response,
              int(response > job.deadline), self.kills[b][i] + 1))
+
+    def _cancel(self, now: float, b: int, i: int, loser: _Commit) -> None:
+        """Deterministic cancellation rule (DESIGN.md §13): the losing
+        attempt is cut at the WINNER's completion instant — never
+        earlier, never by wall clock — its consumed service units are
+        recorded as hedge waste, and its pool is replayed so queued
+        successors reclaim the freed machine-seconds immediately."""
+        wasted = self._elapsed_work(b, loser, now) \
+            if loser.start <= now else 0.0
+        self.metrics.record_hedge_cancel(loser.machine, wasted)
+        self.event_log.append(
+            ("hedge_cancel", now, b, i, loser.machine, wasted))
+        if loser.machine != ED:
+            self._replay(now, edge_wards=[b] if loser.machine == ES
+                         else (), cloud=loser.machine == CC)
 
     def _strike(self, pool: _Pool, now: float,
                 latest: bool = False) -> Optional[int]:
@@ -500,15 +760,14 @@ class MetroEngine:
                                    now, kill_flag))
             return
         slot = pool.slots[k]
-        killed: List[Tuple[int, int]] = []
+        killed: List[Tuple[int, int, _Commit, bool]] = []
         if ev.kill_running:
-            # crash: the machine dies NOW; its in-flight job is lost
+            # crash: the machine dies NOW; its in-flight attempt is lost
             base = now
-            killed = [(b, i) for b, i in self._pool_members(pool)
-                      if not self.finished[b][i]
-                      and self.commits[b][i].slot == k
-                      and self.commits[b][i].start <= now
-                      < self.commits[b][i].end]
+            killed = [(b, i, c, is_hedge)
+                      for b, i, c, is_hedge in self._pool_entries(pool)
+                      if not self.finished[b][i] and c.slot == k
+                      and c.start <= now < c.end]
         else:
             # drain: the machine finishes its running job first
             base = max(self._slot_frees(pool, now)[k], now)
@@ -518,19 +777,153 @@ class MetroEngine:
         self.event_log.append(("fail", now, ev.tier, ward_key, k,
                                down_until, kill_flag))
         fresh: Dict[int, List[int]] = {}
-        for b, i in killed:
-            c = self.commits[b][i]
-            wasted = now - c.start
+        for b, i, c, is_hedge in killed:
+            wasted = self._elapsed_work(b, c, now)
+            if is_hedge:
+                # the crash took the backup attempt: the primary still
+                # runs, so this is a cancellation, not a job loss
+                del self.hedges[(b, i)]
+                self.metrics.record_hedge_cancel(ev.tier, wasted)
+                self.event_log.append(
+                    ("hedge_cancel", now, b, i, ev.tier, wasted))
+                continue
             self.kills[b][i] += 1
             self.metrics.record_kill(ev.tier, wasted)
             self.event_log.append(("kill", now, b, i, ev.tier, k, wasted,
                                    self.kills[b][i]))
+            backup = self.hedges.pop((b, i), None)
+            if backup is not None:
+                # the backup attempt survives the crash: promote it to
+                # THE commitment — no re-decision, the race is resolved
+                self.commits[b][i] = backup
+                if backup.end < _INF:        # pragma: no branch
+                    self._push(backup.end, _P_COMPLETE,
+                               ("complete", b, i, backup.end))
+                self.event_log.append(
+                    ("hedge_promote", now, b, i, backup.machine))
+                self.promoted.add((b, i))
+                continue
             self.commits[b][i] = None
+            cap = self._attempt_cap(c.job)
+            if cap is not None and self.kills[b][i] + 1 > cap:
+                # retries exhausted: shed-with-record, never another
+                # dispatch (bounds crash-wave retry storms)
+                self.finished[b][i] = True
+                self.metrics.record_shed(now, c.job.workload,
+                                         c.job.weight, exhausted=True)
+                self.event_log.append(("giveup", now, b, i, c.job.name,
+                                       self.kills[b][i]))
+                continue
+            if self.retry_backoff > 0.0:
+                # exponential backoff: attempt n re-decides after
+                # backoff * 2^(n-2), not in the crash instant
+                delay = self.retry_backoff * (2.0 ** (self.kills[b][i]
+                                                      - 1))
+                self._push(now + delay, _P_ARRIVE, ("retry", b, i))
+                continue
             if i not in self.pending[b]:
                 self.pending[b].append(i)
             fresh.setdefault(b, []).append(i)
         self._push(down_until, _P_RECOVER, ("recover", ev.tier, ev.ward))
         self._after_fleet_event(ev.tier, ev.ward, now, fresh=fresh)
+
+    def _on_retry(self, now: float, b: int, i: int) -> None:
+        """A backed-off crash retry matures: the job re-enters the
+        normal decision path as a fresh arrival."""
+        if self.finished[b][i] or self.commits[b][i] is not None:
+            return                               # pragma: no cover (safety)
+        self.event_log.append(("retry", now, b, i, self.kills[b][i] + 1))
+        if i not in self.pending[b]:
+            self.pending[b].append(i)
+        wards = range(self.B) if self.policy.joint else [b]
+        self._decide(wards, now, fresh={b: [i]})
+
+    def _on_slow(self, now: float, ev: SlowdownEvent) -> None:
+        """A fail-slow window opens on the busiest machine: record the
+        window, stretch the in-flight attempt's completion through the
+        new rate profile (placement stays, C2), re-arm its watchdog, and
+        replay so queued successors inherit the delay."""
+        pool = self._pool(ev.tier, ev.ward)
+        k = self._strike(pool, now, latest=True)
+        ward_key = -1 if ev.ward is None else ev.ward
+        until = now + ev.duration
+        if k is None:                      # every machine already retired
+            self.event_log.append(("slow", now, ev.tier, ward_key, -1,
+                                   until, ev.factor))
+            return
+        slot = pool.slots[k]
+        slot.slowdowns.append((now, until, ev.factor))
+        self.event_log.append(("slow", now, ev.tier, ward_key, k, until,
+                               ev.factor))
+        for b, i, c, is_hedge in self._pool_entries(pool):
+            if self.finished[b][i] or c.slot != k or \
+                    not c.start <= now < c.end:
+                continue
+            end = _finish_time(slot.slowdowns, c.start,
+                               c.job.proc[pool.tier])
+            if end != c.end:
+                c.end = end
+                kind = "hcomplete" if is_hedge else "complete"
+                self._push(end, _P_COMPLETE, (kind, b, i, end))
+                if not is_hedge:
+                    self._watchdog(b, i, c, now)
+        self._push(until, _P_SLOWEND, ("slowend", ev.tier, ev.ward))
+        self._after_fleet_event(ev.tier, ev.ward, now)
+
+    def _on_slowend(self, now: float, tier: str,
+                    ward: Optional[int]) -> None:
+        """A fail-slow window closes. Timing needs no update — every
+        commitment's end already prices the full window — but replanning
+        policies get the same revisit hook a recovery grants."""
+        self.event_log.append(("slowend", now, tier,
+                               -1 if ward is None else ward))
+        self._after_fleet_event(tier, ward, now)
+
+    def _on_hedge(self, now: float, b: int, i: int, machine: str,
+                  start: float) -> None:
+        """The watchdog fired for a still-running primary: ask the
+        policy's hedge() hook for a backup tier and, if granted,
+        dispatch the backup attempt through the normal pool machinery.
+        First completion wins; the loser is cancelled at that instant."""
+        if self.finished[b][i] or self.hedged[b][i] or \
+                (b, i) in self.hedges:
+            return
+        c = self.commits[b][i]
+        if c is None or (c.machine, c.start) != (machine, start) or \
+                not c.start <= now < c.end:
+            return                               # stale watchdog
+        job = c.job
+        spec = self._shift_spec(job, None, now)
+        req = HedgeRequest(
+            ward=b, job=spec, tier=c.machine, projected_end=c.end,
+            busy={CC: self._busy_view(self.cloud, now),
+                  ES: self._busy_view(self.edges[b], now)},
+            reserved={CC: list(self.cloud.reserved),
+                      ES: list(self.edges[b].reserved)},
+            machines_per_tier={CC: len(self.cloud.slots),
+                               ES: len(self.edges[b].slots)})
+        t = self._hedge_fn(req, now)
+        if t is None:
+            return
+        if t not in _DECISIONS - {SHED} or t == c.machine:
+            raise ValueError(
+                f"hedge policy returned {t!r}; expected a tier in "
+                f"{sorted(_DECISIONS - {SHED})} other than the committed "
+                f"{c.machine!r}, or None")
+        self.hedged[b][i] = True
+        self.metrics.record_hedge(t)
+        self.event_log.append(("hedge", now, b, i, c.machine, t))
+        arrival = now + spec.trans.get(t, 0.0)
+        if t == ED:
+            end = arrival + job.proc[ED]
+            self.hedges[(b, i)] = _Commit(job, ED, arrival, arrival, end,
+                                          slot=-1, planned_at=now)
+            self._push(end, _P_COMPLETE, ("hcomplete", b, i, end))
+        else:
+            self.hedges[(b, i)] = _Commit(job, t, arrival, _INF, _INF,
+                                          slot=-1, planned_at=now)
+            self._replay(now, edge_wards=[b] if t == ES else (),
+                         cloud=t == CC)
 
     def _on_recover(self, now: float, tier: str,
                     ward: Optional[int]) -> None:
@@ -615,14 +1008,24 @@ class MetroEngine:
             kind = payload[0]
             if kind == "complete":
                 self._on_complete(t, *payload[1:])
+            elif kind == "hcomplete":
+                self._on_hcomplete(t, *payload[1:])
             elif kind == "arrive":
                 self._on_arrive(t, *payload[1:])
+            elif kind == "retry":
+                self._on_retry(t, *payload[1:])
             elif kind == "fail":
                 self._on_fail(t, payload[1])
+            elif kind == "slow":
+                self._on_slow(t, payload[1])
+            elif kind == "slowend":
+                self._on_slowend(t, *payload[1:])
             elif kind == "scale":
                 self._on_scale(t, payload[1])
             elif kind == "net":
                 self._on_net(t, *payload[1:])
+            elif kind == "hedge":
+                self._on_hedge(t, *payload[1:])
             else:
                 self._on_recover(t, *payload[1:])
         seconds = time.perf_counter() - t0
@@ -673,10 +1076,18 @@ def simulate_metro(ward_traces: Sequence[Sequence[JobSpec]],
                    failures: Sequence[FailureEvent] = (),
                    scale_events: Sequence[ScaleEvent] = (),
                    network_events: Sequence[NetworkEvent] = (),
+                   slowdowns: Sequence[SlowdownEvent] = (),
+                   hedge_factor: Optional[float] = None,
+                   retry_backoff: float = 0.0,
+                   max_attempts: Union[int, Mapping[str, int],
+                                       None] = None,
                    metrics: MetroMetrics | None = None) -> MetroResult:
     """Build-and-run convenience wrapper (one engine per policy run)."""
     return MetroEngine(ward_traces, policy,
                        machines_per_tier=machines_per_tier,
                        failures=failures, scale_events=scale_events,
                        network_events=network_events,
+                       slowdowns=slowdowns, hedge_factor=hedge_factor,
+                       retry_backoff=retry_backoff,
+                       max_attempts=max_attempts,
                        metrics=metrics).run()

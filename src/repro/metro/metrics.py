@@ -31,7 +31,10 @@ class StreamingQuantiles:
     add() is O(1); quantile(q) interpolates inside the bucket holding the
     q-th observation. Values below `lo` land in bucket 0, values above
     `hi` in the overflow bucket (whose upper edge is the running max, so
-    a pathological tail still reports a finite p99)."""
+    a pathological tail still reports a finite p99). The clamping is NOT
+    silent: `underflow`/`overflow` count every observation outside
+    [lo, hi], so a fail-slow-stretched tail that escapes the range is
+    visible in summary() rather than faking an in-range quantile."""
 
     def __init__(self, lo: float = 1e-2, hi: float = 1e5, bins: int = 256):
         if not (lo > 0 and hi > lo and bins > 1):
@@ -43,6 +46,8 @@ class StreamingQuantiles:
         self.n = 0
         self.max = 0.0
         self.sum = 0.0
+        self.underflow = 0             # observations strictly below lo
+        self.overflow = 0              # observations strictly above hi
 
     def _bucket(self, x: float) -> int:
         if x <= self.lo:
@@ -64,6 +69,10 @@ class StreamingQuantiles:
         self.sum += x
         if x > self.max:
             self.max = x
+        if x < self.lo:
+            self.underflow += 1
+        elif x > self.hi:
+            self.overflow += 1
 
     def merge(self, other: "StreamingQuantiles") -> None:
         if (other.lo, other.hi, other.bins) != (self.lo, self.hi, self.bins):
@@ -72,6 +81,8 @@ class StreamingQuantiles:
         self.n += other.n
         self.sum += other.sum
         self.max = max(self.max, other.max)
+        self.underflow += other.underflow
+        self.overflow += other.overflow
 
     def quantile(self, q: float) -> float:
         if not 0.0 <= q <= 1.0:
@@ -126,6 +137,16 @@ class MetroMetrics:
         self.retries = 0               # crash kills (lost in-flight jobs)
         self.wasted_seconds = 0.0      # machine-seconds lost to kills
         self.max_attempts = 1          # worst dispatch count of any job
+        self.retry_exhausted = 0       # sheds from the max_attempts cap
+        self.retries_by_tier: Dict[str, int] = {}
+        self.wasted_by_tier: Dict[str, float] = {}
+        self.hedges = 0                # backup attempts dispatched
+        self.hedge_wins = 0            # completions where the backup won
+        self.hedge_waste = 0.0         # machine-seconds of cancelled work
+        self.hedge_waste_by_tier: Dict[str, float] = {}
+        self.hedge_by_tier: Dict[str, int] = {}   # backup target tiers
+        # per-class response histograms for the p99/p99.9 tail report
+        self.class_hist: Dict[str, StreamingQuantiles] = {}
         self.weighted_finished = 0.0   # sum of weight over completed + shed
         self.weighted_missed = 0.0     # ... over missed + shed
         # class -> [completed, missed, shed]
@@ -147,14 +168,19 @@ class MetroMetrics:
 
     def record(self, now: float, wclass: str, response: float,
                deadline: float, tier: str, proc: float, *,
-               attempts: int = 1, weight: float = 1.0) -> None:
+               attempts: int = 1, weight: float = 1.0,
+               hedged: bool = False, hedge_win: bool = False) -> None:
         """One job completion at sim time `now`. `attempts` counts
         dispatches (1 = never crash-killed); `weight` feeds the
-        weighted miss-rate alongside the per-class counters."""
+        weighted miss-rate alongside the per-class counters. `hedged`
+        marks a job that ever dispatched a backup attempt; `hedge_win`
+        marks the backup finishing first."""
         self._roll(now)
         missed = response > deadline
         self.total.add(response)
         self.completions += 1
+        if hedge_win:
+            self.hedge_wins += 1
         self.busy_time[tier] = self.busy_time.get(tier, 0.0) + proc
         if attempts > self.max_attempts:
             self.max_attempts = attempts
@@ -162,6 +188,10 @@ class MetroMetrics:
         cls = wclass or _UNCLASSED
         self.class_weight[cls] = max(self.class_weight.get(cls, weight),
                                      weight)
+        hist = self.class_hist.get(cls)
+        if hist is None:
+            hist = self.class_hist[cls] = StreamingQuantiles(*self._shape)
+        hist.add(response)
         row = self.by_class.setdefault(cls, [0, 0, 0])
         row[0] += 1
         if missed:
@@ -175,12 +205,15 @@ class MetroMetrics:
         if now > self.last_time:
             self.last_time = now
 
-    def record_shed(self, now: float, wclass: str,
-                    weight: float = 1.0) -> None:
-        """One job dropped by a SHED decision: an explicit deadline
-        miss (no response sample — the job never ran)."""
+    def record_shed(self, now: float, wclass: str, weight: float = 1.0,
+                    exhausted: bool = False) -> None:
+        """One job dropped — by a SHED decision, or (`exhausted=True`)
+        because its crash-retry budget ran out (the max_attempts cap):
+        an explicit deadline miss (no response sample)."""
         self._roll(now)
         self.shed += 1
+        if exhausted:
+            self.retry_exhausted += 1
         self.weighted_finished += weight
         self.weighted_missed += weight
         cls = wclass or _UNCLASSED
@@ -197,6 +230,21 @@ class MetroMetrics:
         seconds of partial work on `tier` are lost and the job retries."""
         self.retries += 1
         self.wasted_seconds += wasted
+        self.retries_by_tier[tier] = self.retries_by_tier.get(tier, 0) + 1
+        self.wasted_by_tier[tier] = \
+            self.wasted_by_tier.get(tier, 0.0) + wasted
+
+    def record_hedge(self, tier: str) -> None:
+        """A backup attempt was dispatched onto `tier`."""
+        self.hedges += 1
+        self.hedge_by_tier[tier] = self.hedge_by_tier.get(tier, 0) + 1
+
+    def record_hedge_cancel(self, tier: str, wasted: float) -> None:
+        """The losing attempt of a hedge race was cancelled on `tier`
+        after consuming `wasted` machine-seconds (0 if never started)."""
+        self.hedge_waste += wasted
+        self.hedge_waste_by_tier[tier] = \
+            self.hedge_waste_by_tier.get(tier, 0.0) + wasted
 
     # ------------------------------------------------------------ reading
     @property
@@ -213,6 +261,11 @@ class MetroMetrics:
     @property
     def shed_rate(self) -> float:
         return self.shed / self.finished if self.finished else 0.0
+
+    @property
+    def hedge_rate(self) -> float:
+        """Backup attempts dispatched per finished job."""
+        return self.hedges / self.finished if self.finished else 0.0
 
     @property
     def weighted_miss_rate(self) -> float:
@@ -255,11 +308,28 @@ class MetroMetrics:
             "shed": self.shed,
             "shed_rate": self.shed_rate,
             "retries": self.retries,
+            "retry_exhausted": self.retry_exhausted,
+            "retries_by_tier": dict(sorted(self.retries_by_tier.items())),
             "wasted_machine_seconds": self.wasted_seconds,
+            "wasted_by_tier": dict(sorted(self.wasted_by_tier.items())),
             "max_attempts": self.max_attempts,
+            "hedges": self.hedges,
+            "hedge_rate": self.hedge_rate,
+            "hedge_wins": self.hedge_wins,
+            "hedge_waste": self.hedge_waste,
+            "hedge_by_tier": dict(sorted(self.hedge_by_tier.items())),
+            "hedge_waste_by_tier":
+                dict(sorted(self.hedge_waste_by_tier.items())),
             "p50": self.total.quantile(0.50),
             "p95": self.total.quantile(0.95),
             "p99": self.total.quantile(0.99),
+            "p999": self.total.quantile(0.999),
+            "p99_by_class": {c: h.quantile(0.99)
+                             for c, h in sorted(self.class_hist.items())},
+            "p999_by_class": {c: h.quantile(0.999)
+                              for c, h in sorted(self.class_hist.items())},
+            "tail_underflow": self.total.underflow,
+            "tail_overflow": self.total.overflow,
             "mean_response": self.total.mean,
             "max_response": self.total.max,
             "miss_rate": self.miss_rate,

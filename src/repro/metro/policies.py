@@ -32,6 +32,13 @@ Four built-ins:
   * `SheddingPolicy` — a wrapper that delegates tier choice to any
     inner policy, then sheds lowest-weight-class movable jobs whose
     reserved backlog exceeds a deadline-derived horizon.
+  * `HedgingPolicy` — a wrapper that delegates `decide` to any inner
+    policy and additionally answers the engine's hedge watchdog
+    (`hedge()` hook): when an in-flight job of the HEAVIEST weight
+    class has overrun its expected runtime (fail-slow machine) or its
+    committed end misses the deadline, pick the backup tier whose
+    reserved queue finishes the job earliest — if that beats the
+    committed projection by a margin (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -46,6 +53,7 @@ from repro.core.tiers import CC, ED, ES
 # sentinel decision: drop the job instead of placing it on a tier (the
 # engine validates decisions against tiers + SHED in one place)
 SHED = "shed"
+_INF = float("inf")
 
 
 @dataclass
@@ -62,6 +70,22 @@ class ReplanRequest:
     # OTHER wards' unstarted cloud commitments (shifted), queue-active
     # but immovable for this ward
     background: List[JobSpec] = field(default_factory=list)
+
+
+@dataclass
+class HedgeRequest:
+    """One in-flight job's hedge question at a watchdog event: the job
+    as a fresh replan spec (release = now, full re-ship transmission,
+    degraded-network factors priced in), where it currently runs and
+    when the engine projects it to finish, plus the same fleet views a
+    ReplanRequest carries."""
+    ward: int
+    job: JobSpec                        # fresh shifted spec (release=now)
+    tier: str                           # committed (running) tier
+    projected_end: float                # committed end under fail-slow
+    busy: Dict[str, List[float]]
+    reserved: Dict[str, List[float]]
+    machines_per_tier: Dict[str, int]
 
 
 class Policy(Protocol):
@@ -257,11 +281,73 @@ class SheddingPolicy:
         return decisions
 
 
+@dataclass
+class HedgingPolicy:
+    """Deadline-aware hedging on top of any inner policy (DESIGN.md
+    §13): `decide` is delegated untouched; the `hedge()` hook answers
+    the engine's watchdog for in-flight stragglers. Mirroring
+    `SheddingPolicy`'s class discipline in reverse, only jobs of the
+    HEAVIEST weight class seen so far are ever hedged — backup attempts
+    burn real machine-seconds, so the duplicate-execution budget is
+    spent exclusively on the life-critical SLA. The backup tier is the
+    one whose reserved view (every queued commitment dispatched)
+    finishes the job earliest, and the hedge is declined unless that
+    estimate beats the committed projection by `min_gain` time units —
+    a backup that would lose the race is pure waste."""
+    inner: Optional[Policy] = None              # default: GreedyPolicy
+    min_gain: float = 2.0
+    name: str = "hedge"
+
+    def __post_init__(self):
+        if self.inner is None:
+            self.inner = GreedyPolicy()
+        self._max_weight = float("-inf")
+
+    @property
+    def joint(self) -> bool:
+        return self.inner.joint
+
+    @property
+    def replans_on_fleet_events(self) -> bool:
+        return self.inner.replans_on_fleet_events
+
+    def _see(self, jobs) -> None:
+        for job in jobs:
+            if job.weight > self._max_weight:
+                self._max_weight = job.weight
+
+    def decide(self, requests, now):
+        for req in requests:
+            self._see(req.shifted)
+        return self.inner.decide(requests, now)
+
+    def hedge(self, req: HedgeRequest, now: float) -> Optional[str]:
+        self._see((req.job,))
+        job = req.job
+        if job.weight < self._max_weight:
+            return None                 # hedge only the heaviest class
+        best, best_end = None, req.projected_end - self.min_gain
+        for tier in (ED, ES, CC):
+            if tier == req.tier or job.proc.get(tier, _INF) == _INF:
+                continue
+            arr = now + job.trans.get(tier, 0.0)
+            if tier == ED:
+                end = arr + job.proc[ED]
+            else:
+                vec = req.reserved.get(tier) or []
+                free = min(vec) if vec else now
+                end = max(arr, free, now) + job.proc[tier]
+            if end < best_end:
+                best, best_end = tier, end
+        return best
+
+
 def make_policy(name: str, **kw) -> Policy:
     """Factory keyed by the names serve/benchmarks print."""
     try:
         cls = {"greedy": GreedyPolicy, "tabu": TabuPolicy,
-               "fleet": FleetPolicy, "shed": SheddingPolicy}[name]
+               "fleet": FleetPolicy, "shed": SheddingPolicy,
+               "hedge": HedgingPolicy}[name]
     except KeyError:
         raise ValueError(f"unknown metro policy {name!r}") from None
     return cls(**kw)

@@ -16,11 +16,12 @@ is tiny (paper Table IV: 7.5k FLOPs), the phenotype classifier heavy
 
 Also provides the fleet-event streams the engine consumes — Poisson
 machine failures (drain or crash mode) with repair times, degraded-
-network windows, surge-following elastic scale events — and the seeded
-chaos scenario-pack registry (`SCENARIO_PACKS` / `make_scenario`): named
-(traces, failures, scales, network) bundles that serve, the benchmarks
-and the per-scenario regression floors all share, so a pack name plus a
-seed pins one bit-identical chaos run (DESIGN.md §11).
+network windows, fail-slow slowdown windows, surge-following elastic
+scale events — and the seeded chaos scenario-pack registry
+(`SCENARIO_PACKS` / `make_scenario`): named (traces, failures, scales,
+network, slowdowns) bundles that serve, the benchmarks and the
+per-scenario regression floors all share, so a pack name plus a seed
+pins one bit-identical chaos run (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -33,7 +34,8 @@ import numpy as np
 from repro.core.problems import metro_costs
 from repro.core.simulator import JobSpec
 from repro.core.tiers import CC, ES
-from repro.metro.engine import FailureEvent, NetworkEvent, ScaleEvent
+from repro.metro.engine import (FailureEvent, NetworkEvent, ScaleEvent,
+                                SlowdownEvent)
 
 DAY = 1440.0                      # minutes
 
@@ -178,6 +180,25 @@ def network_events(rng: np.random.Generator, horizon: float, *,
             for t in starts]
 
 
+def slowdown_events(rng: np.random.Generator, horizon: float, *,
+                    tier: str = CC, ward: int | None = None,
+                    windows: int = 3,
+                    duration: Tuple[float, float] = (10.0, 25.0),
+                    factor: Tuple[float, float] = (0.15, 0.4),
+                    span: Tuple[float, float] | None = None
+                    ) -> List[SlowdownEvent]:
+    """`windows` fail-slow windows on one pool: starts uniform over the
+    (optionally confined) span, durations and rate factors uniform over
+    their ranges. Each strikes the busiest machine at its onset;
+    overlapping windows on one machine compound (DESIGN.md §13)."""
+    lo, hi = span if span is not None else (0.0, 0.85 * horizon)
+    starts = sorted(float(rng.uniform(lo, hi)) for _ in range(windows))
+    return [SlowdownEvent(time=t, tier=tier, ward=ward,
+                          duration=float(rng.uniform(*duration)),
+                          factor=float(rng.uniform(*factor)))
+            for t in starts]
+
+
 def default_scenario(seed: int, wards: int = 4, horizon: float = 120.0, *,
                      base_rate: float = 0.12,
                      surges: Sequence[Tuple[float, float, float]] | None
@@ -223,6 +244,7 @@ class Scenario:
     failures: List[FailureEvent] = field(default_factory=list)
     scales: List[ScaleEvent] = field(default_factory=list)
     network: List[NetworkEvent] = field(default_factory=list)
+    slowdowns: List[SlowdownEvent] = field(default_factory=list)
 
     @property
     def jobs(self) -> int:
@@ -295,6 +317,31 @@ def _pack_diurnal_day(seed: int, wards: int, horizon: float) -> Scenario:
     return Scenario("diurnal_day", tr, fails)
 
 
+def _pack_fail_slow_tail(seed: int, wards: int,
+                         horizon: float) -> Scenario:
+    """Fail-slow machines without a single fail-stop event: deep
+    slowdown windows (machines crawling at 3-8% speed — a failing disk
+    or thermal throttle, not an outage) strike the ward edge pools,
+    the workhorse tier, while the metropolitan cloud stays healthy.
+    Nothing crashes and nothing is lost — in-flight edge work just
+    silently stretches — which is exactly the regime deadline-aware
+    hedging is built for: an unhedged run eats the stretched tail (a
+    started commitment is immutable, C2, so replanning cannot save it),
+    a hedged run races a healthy-tier backup against the straggler and
+    cancels the loser (DESIGN.md §13)."""
+    tr = metro_traces(np.random.default_rng(seed), wards, horizon,
+                      base_rate=0.15)
+    rng = np.random.default_rng(seed + 201)
+    slows: List[SlowdownEvent] = []
+    for b in range(wards):
+        slows.extend(slowdown_events(
+            rng, horizon, tier=ES, ward=b, windows=6,
+            duration=(0.1 * horizon, 0.2 * horizon),
+            factor=(0.03, 0.08)))
+    slows.sort(key=lambda e: e.time)
+    return Scenario("fail_slow_tail", tr, slowdowns=slows)
+
+
 # name -> (builder, default wards, default horizon in trace minutes)
 SCENARIO_PACKS: Dict[str, Tuple[
     Callable[[int, int, float], Scenario], int, float]] = {
@@ -303,6 +350,7 @@ SCENARIO_PACKS: Dict[str, Tuple[
     "mass_casualty_crash": (_pack_mass_casualty_crash, 4, 90.0),
     "degraded_network": (_pack_degraded_network, 4, 90.0),
     "diurnal_day": (_pack_diurnal_day, 2, DAY),
+    "fail_slow_tail": (_pack_fail_slow_tail, 4, 180.0),
 }
 
 

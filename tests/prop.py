@@ -1,6 +1,7 @@
 """Tiny property-sweep helper (hypothesis is not installed in this offline
 container — DESIGN.md §6). Runs a check over seeded random cases and
-reports every failing seed."""
+reports every failing seed, plus a fuzzed fleet-event generator for the
+metro engine's chaos invariants (DESIGN.md §11/§13)."""
 from __future__ import annotations
 
 import numpy as np
@@ -17,3 +18,55 @@ def sweep(check, n_cases: int = 20, seed: int = 0):
             failures.append((seed + i, str(e)))
     assert not failures, f"{len(failures)}/{n_cases} cases failed: " \
                          f"{failures[:3]}"
+
+
+def random_fleet_events(rng: np.random.Generator, horizon: float,
+                        wards: int):
+    """A fuzzed interleaving of every fleet-event kind the metro engine
+    consumes — drain and crash failures, fail-slow slowdown windows,
+    elastic scale events, degraded-network windows — on random tiers
+    and wards, for the chaos-invariant property sweeps. Returns kwargs
+    for `simulate_metro`."""
+    from repro.core.tiers import CC, ES
+    from repro.metro.engine import (FailureEvent, NetworkEvent, ScaleEvent,
+                                    SlowdownEvent)
+
+    def tier_ward():
+        if rng.uniform() < 0.5:
+            return CC, None
+        return ES, int(rng.integers(wards))
+
+    failures = []
+    for _ in range(int(rng.integers(0, 4))):
+        t, w = tier_ward()
+        failures.append(FailureEvent(
+            time=float(rng.uniform(0, horizon)), tier=t, ward=w,
+            duration=float(rng.uniform(2, 0.3 * horizon)),
+            kill_running=bool(rng.uniform() < 0.5)))
+    slowdowns = []
+    for _ in range(int(rng.integers(0, 4))):
+        t, w = tier_ward()
+        slowdowns.append(SlowdownEvent(
+            time=float(rng.uniform(0, horizon)), tier=t, ward=w,
+            duration=float(rng.uniform(2, 0.4 * horizon)),
+            factor=float(rng.uniform(0.05, 0.8))))
+    scales, downs = [], 0
+    for _ in range(int(rng.integers(0, 3))):
+        t, w = tier_ward()
+        # at most one retirement: pools start at 2 machines and the
+        # engine (rightly) rejects a scale-down below 1
+        delta = int(rng.choice([-1, 1])) if downs == 0 else 1
+        downs += delta < 0
+        scales.append(ScaleEvent(
+            time=float(rng.uniform(0, horizon)), tier=t, ward=w,
+            delta=delta))
+    network = []
+    for _ in range(int(rng.integers(0, 3))):
+        network.append(NetworkEvent(
+            time=float(rng.uniform(0, horizon)), tier=CC,
+            duration=float(rng.uniform(2, 0.3 * horizon)),
+            factor=float(rng.uniform(1.5, 8.0))))
+    return {"failures": sorted(failures, key=lambda e: e.time),
+            "slowdowns": sorted(slowdowns, key=lambda e: e.time),
+            "scale_events": sorted(scales, key=lambda e: e.time),
+            "network_events": sorted(network, key=lambda e: e.time)}

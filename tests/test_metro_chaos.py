@@ -31,7 +31,8 @@ def _run_pack(name, policy, seed=0, wards=None, horizon=None):
     sc = traces.make_scenario(name, seed, wards=wards, horizon=horizon)
     res = simulate_metro(sc.traces, policy,
                          machines_per_tier=MPT, failures=sc.failures,
-                         scale_events=sc.scales, network_events=sc.network)
+                         scale_events=sc.scales, network_events=sc.network,
+                         slowdowns=sc.slowdowns)
     return sc, res
 
 

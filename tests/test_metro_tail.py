@@ -1,0 +1,494 @@
+"""Tail-tolerance tests for the metro engine (DESIGN.md §13):
+fail-slow slowdown windows and their re-timing math, the hedge
+watchdog/backup/cancellation lifecycle, bounded retries with backoff,
+the HedgingPolicy class gate, the fail_slow_tail ranking invariant, the
+metro_hedging regression-gate logic, and a fuzzed chaos-invariant sweep
+over every fleet-event kind."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from prop import random_fleet_events, sweep
+from repro.core.simulator import JobSpec
+from repro.core.tiers import CC, ED, ES
+from repro.metro import traces
+from repro.metro.engine import (FailureEvent, MetroEngine, SlowdownEvent,
+                                _Pool, _finish_time, _work_done,
+                                simulate_metro)
+from repro.metro.metrics import MetroMetrics, StreamingQuantiles
+from repro.metro.policies import (GreedyPolicy, HedgeRequest, HedgingPolicy,
+                                  TabuPolicy)
+
+MPT = {CC: 1, ES: 1}
+
+
+def _cloud_job(name, release, proc_c, trans_c=2.0, proc_d=500.0,
+               deadline=float("inf"), weight=1.0, workload=""):
+    return JobSpec(name=name, release=release, weight=weight,
+                   proc={CC: proc_c, ES: 500.0, ED: proc_d},
+                   trans={CC: trans_c, ES: 0.0, ED: 0.0},
+                   deadline=deadline, workload=workload)
+
+
+class _HedgeTo:
+    """Test policy: inner decisions untouched, hedge always to `tier`."""
+    name = "hedge_to"
+    joint = False
+    replans_on_fleet_events = False
+
+    def __init__(self, tier):
+        self.inner = GreedyPolicy()
+        self.tier = tier
+
+    def decide(self, requests, now):
+        return self.inner.decide(requests, now)
+
+    def hedge(self, req, now):
+        return self.tier
+
+
+# -------------------------------------------------- fail-slow re-timing
+def test_work_done_and_finish_time_are_inverse():
+    win = [(5.0, 25.0, 0.5), (10.0, 15.0, 0.4)]     # overlap compounds
+    for start, work in ((0.0, 3.0), (2.0, 10.0), (7.0, 4.0), (30.0, 5.0)):
+        end = _finish_time(win, start, work)
+        assert _work_done(win, start, end) == pytest.approx(work)
+    # the exact early-returns (no window): bit-identical wall clock
+    assert _work_done([], 3.0, 11.0) == 8.0
+    assert _finish_time([], 3.0, 8.0) == 11.0
+    # work past every window resumes nominal rate
+    assert _finish_time([(0.0, 10.0, 0.5)], 0.0, 20.0) == 25.0
+
+
+def test_slowdown_stretches_in_flight_job_exactly():
+    # A starts at 2 (trans 2), nominal end 12; at t=5 the machine slows
+    # to half speed for 20: 3 of 10 units done, 7 remain at 0.5 -> 14
+    # wall seconds -> end 19, placement unchanged (C2)
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0)]
+    slow = SlowdownEvent(time=5.0, tier=CC, duration=20.0, factor=0.5)
+    res = simulate_metro([jobs], GreedyPolicy(), machines_per_tier=MPT,
+                         slowdowns=[slow])
+    (a,) = res.wards[0].entries
+    assert (a.machine, a.start, a.end) == (CC, 2.0, 19.0)
+    assert ("slow", 5.0, CC, -1, 0, 25.0, 0.5) in res.event_log
+    assert ("slowend", 25.0, CC, -1) in res.event_log
+    assert res.metrics.retries == 0          # nothing was lost
+
+
+def test_slowdown_delays_queued_successor():
+    # B queues behind A on the single cloud machine; A's stretch must
+    # push B's start/end through the replay, and B's own run inside the
+    # window is slowed too
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0),
+            _cloud_job("B", 0.0, proc_c=4.0, trans_c=3.0)]
+    slow = SlowdownEvent(time=5.0, tier=CC, duration=100.0, factor=0.5)
+    res = simulate_metro([jobs], GreedyPolicy(), machines_per_tier=MPT,
+                         slowdowns=[slow])
+    a, b = sorted(res.wards[0].entries, key=lambda e: e.start)
+    assert a.end == pytest.approx(19.0)      # as above
+    assert b.start == pytest.approx(19.0)    # FIFO successor
+    assert b.end == pytest.approx(19.0 + 4.0 / 0.5)
+
+
+def test_slowdown_validation():
+    jobs = [[_cloud_job("A", 0.0, proc_c=1.0)]]
+    with pytest.raises(ValueError, match="factor"):
+        MetroEngine(jobs, GreedyPolicy(), machines_per_tier=MPT,
+                    slowdowns=[SlowdownEvent(time=0.0, factor=1.0)])
+    with pytest.raises(ValueError, match="duration"):
+        MetroEngine(jobs, GreedyPolicy(), machines_per_tier=MPT,
+                    slowdowns=[SlowdownEvent(time=0.0, duration=0.0)])
+
+
+def test_capacity_integral_prices_slowdowns_and_outages():
+    pool = _Pool(CC, 1)
+    slot = pool.slots[0]
+    # a lone half-speed window [10, 20) forgoes 5 machine-seconds
+    slot.slowdowns = [(10.0, 20.0, 0.5)]
+    assert pool.capacity_integral(30.0) == pytest.approx(30.0 - 5.0)
+    # a window inside an outage is NOT double-subtracted: the outage
+    # already removed those seconds entirely
+    slot.outages = [(8.0, 22.0)]
+    assert pool.capacity_integral(30.0) == pytest.approx(30.0 - 14.0)
+    # partial overlap: only the uncovered part of the window is shaved
+    slot.outages = [(15.0, 40.0)]
+    assert pool.capacity_integral(30.0) == \
+        pytest.approx(30.0 - 15.0 - 0.5 * 5.0)
+
+
+# ------------------------------------------------------ hedge lifecycle
+def test_hedge_backup_wins_and_primary_cancelled():
+    # A on cloud (start 2, nominal end 12) crawls at 0.1x from t=4: end
+    # stretches to 84, the 1.5x watchdog fires at 17, the device backup
+    # lands at 30 and wins; the loser is cut at 30 having consumed
+    # 2 + 26*0.1 = 4.6 service units
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0, proc_d=13.0)]
+    slow = SlowdownEvent(time=4.0, tier=CC, duration=100.0, factor=0.1)
+    res = simulate_metro([jobs], _HedgeTo(ED), machines_per_tier=MPT,
+                         slowdowns=[slow], hedge_factor=1.5)
+    (a,) = res.wards[0].entries
+    assert (a.machine, a.start, a.end) == (ED, 17.0, 30.0)
+    assert ("hedge", 17.0, 0, 0, CC, ED) in res.event_log
+    cancel = next(e for e in res.event_log if e[0] == "hedge_cancel")
+    assert cancel[:5] == ("hedge_cancel", 30.0, 0, 0, CC)
+    assert cancel[5] == pytest.approx(4.6)
+    m = res.metrics
+    assert (m.hedges, m.hedge_wins) == (1, 1)
+    assert m.hedge_waste == pytest.approx(4.6)
+    assert m.hedge_by_tier == {ED: 1}
+    assert m.hedge_waste_by_tier == {CC: pytest.approx(4.6)}
+    comp = next(e for e in res.event_log if e[0] == "complete")
+    assert comp[4] == ED and comp[1] == 30.0
+
+
+def test_hedge_primary_wins_and_backup_cancelled():
+    # milder slowdown: primary ends at 20, the device backup (end 217)
+    # loses the race and is cancelled at 20 with 3 wall seconds consumed
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0, proc_d=200.0)]
+    slow = SlowdownEvent(time=4.0, tier=CC, duration=100.0, factor=0.5)
+    res = simulate_metro([jobs], _HedgeTo(ED), machines_per_tier=MPT,
+                         slowdowns=[slow], hedge_factor=1.5)
+    (a,) = res.wards[0].entries
+    assert (a.machine, a.end) == (CC, 20.0)
+    cancel = next(e for e in res.event_log if e[0] == "hedge_cancel")
+    assert cancel[:5] == ("hedge_cancel", 20.0, 0, 0, ED)
+    assert cancel[5] == pytest.approx(3.0)
+    m = res.metrics
+    assert (m.hedges, m.hedge_wins) == (1, 0)
+    assert m.hedge_waste == pytest.approx(3.0)
+
+
+def test_crash_on_hedged_primary_promotes_backup():
+    # the crash takes the straggling primary AFTER a backup is in
+    # flight: no re-decision — the backup is promoted to THE commitment
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0, proc_d=13.0)]
+    slow = SlowdownEvent(time=4.0, tier=CC, duration=100.0, factor=0.1)
+    crash = FailureEvent(time=20.0, tier=CC, duration=5.0,
+                         kill_running=True)
+    res = simulate_metro([jobs], _HedgeTo(ED), machines_per_tier=MPT,
+                         slowdowns=[slow], failures=[crash],
+                         hedge_factor=1.5)
+    (a,) = res.wards[0].entries
+    assert (a.machine, a.end) == (ED, 30.0)
+    assert ("hedge_promote", 20.0, 0, 0, ED) in res.event_log
+    comp = next(e for e in res.event_log if e[0] == "complete")
+    assert comp[-1] == 2                     # the kill still counts
+    m = res.metrics
+    assert m.retries == 1 and m.completions == 1
+    assert m.hedge_wins == 1                 # the backup's completion won
+
+
+def test_crash_on_backup_is_a_cancellation_not_a_loss():
+    # primary runs on the ward edge; the hedge races a cloud backup; the
+    # cloud crash takes the BACKUP — the primary keeps running and the
+    # job never counts as killed
+    job = JobSpec(name="A", release=0.0, weight=1.0,
+                  proc={CC: 30.0, ES: 10.0, ED: 500.0},
+                  trans={CC: 2.0, ES: 0.0, ED: 0.0})
+    slow = SlowdownEvent(time=2.0, tier=ES, ward=0, duration=100.0,
+                         factor=0.1)
+    crash = FailureEvent(time=20.0, tier=CC, duration=5.0,
+                         kill_running=True)
+    res = simulate_metro([[job]], _HedgeTo(CC), machines_per_tier=MPT,
+                         slowdowns=[slow], failures=[crash],
+                         hedge_factor=1.5)
+    (a,) = res.wards[0].entries
+    assert a.machine == ES and a.end == pytest.approx(82.0)
+    cancel = next(e for e in res.event_log if e[0] == "hedge_cancel")
+    assert cancel[1:5] == (20.0, 0, 0, CC)
+    assert not any(e[0] == "kill" for e in res.event_log)
+    m = res.metrics
+    assert (m.retries, m.hedges, m.hedge_wins) == (0, 1, 0)
+    assert m.completions == 1
+
+
+def test_at_most_one_hedge_per_job():
+    # after the first backup loses, further slowdown re-arms must NOT
+    # dispatch a second hedge (self.hedged persists for the job's life)
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0, proc_d=200.0)]
+    slows = [SlowdownEvent(time=4.0, tier=CC, duration=100.0, factor=0.5),
+             SlowdownEvent(time=18.0, tier=CC, duration=50.0, factor=0.5)]
+    res = simulate_metro([jobs], _HedgeTo(ED), machines_per_tier=MPT,
+                         slowdowns=slows, hedge_factor=1.5)
+    assert res.metrics.hedges == 1
+    assert sum(1 for e in res.event_log if e[0] == "hedge") == 1
+
+
+def test_hedge_to_committed_tier_rejected():
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0)]
+    slow = SlowdownEvent(time=4.0, tier=CC, duration=100.0, factor=0.1)
+    with pytest.raises(ValueError, match="hedge policy returned"):
+        simulate_metro([jobs], _HedgeTo(CC), machines_per_tier=MPT,
+                       slowdowns=[slow], hedge_factor=1.5)
+
+
+def test_hedging_knob_validation():
+    jobs = [[_cloud_job("A", 0.0, proc_c=1.0)]]
+    with pytest.raises(ValueError, match="hedge_factor"):
+        MetroEngine(jobs, _HedgeTo(ED), machines_per_tier=MPT,
+                    hedge_factor=1.0)
+    with pytest.raises(ValueError, match="hedge"):
+        MetroEngine(jobs, GreedyPolicy(), machines_per_tier=MPT,
+                    hedge_factor=1.5)        # no hedge() hook
+    with pytest.raises(ValueError, match="retry_backoff"):
+        MetroEngine(jobs, GreedyPolicy(), machines_per_tier=MPT,
+                    retry_backoff=-1.0)
+    with pytest.raises(ValueError, match="max_attempts"):
+        MetroEngine(jobs, GreedyPolicy(), machines_per_tier=MPT,
+                    max_attempts=0)
+    with pytest.raises(ValueError, match="max_attempts"):
+        MetroEngine(jobs, GreedyPolicy(), machines_per_tier=MPT,
+                    max_attempts={"alert": 0})
+
+
+# --------------------------------------------- bounded retries / backoff
+def test_retry_cap_sheds_with_record():
+    # one attempt allowed: the crash kill exhausts the cap immediately
+    # and the job is shed-with-record, never re-dispatched
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0, deadline=30.0,
+                       workload="alert")]
+    crash = FailureEvent(time=5.0, tier=CC, duration=10.0,
+                         kill_running=True)
+    res = simulate_metro([jobs], GreedyPolicy(), machines_per_tier=MPT,
+                         failures=[crash], max_attempts=1)
+    assert ("giveup", 5.0, 0, 0, "A", 1) in res.event_log
+    m = res.metrics
+    assert (m.completions, m.shed, m.retry_exhausted) == (0, 1, 1)
+    assert m.finished == 1 and m.miss_rate == 1.0
+    assert res.wards[0].entries == []
+    # per-class cap: an unlisted class stays unbounded
+    res2 = simulate_metro([jobs], GreedyPolicy(), machines_per_tier=MPT,
+                          failures=[crash],
+                          max_attempts={"phenotype": 1})
+    assert res2.metrics.completions == 1
+    assert res2.metrics.retry_exhausted == 0
+
+
+def test_retry_backoff_delays_re_decision():
+    # immediate-retry legacy path re-decides in the crash instant; with
+    # backoff 3 the first retry matures at 5 + 3*2^0 = 8 and the job
+    # restarts after the repair at 15
+    jobs = [_cloud_job("A", 0.0, proc_c=10.0)]
+    crash = FailureEvent(time=5.0, tier=CC, duration=10.0,
+                         kill_running=True)
+    res = simulate_metro([jobs], GreedyPolicy(), machines_per_tier=MPT,
+                         failures=[crash], retry_backoff=3.0)
+    assert ("retry", 8.0, 0, 0, 2) in res.event_log
+    (a,) = res.wards[0].entries
+    assert (a.start, a.end) == (15.0, 25.0)
+    comp = next(e for e in res.event_log if e[0] == "complete")
+    assert comp[-1] == 2
+    # per-tier breakout of the kill (satellite: MetroMetrics.summary)
+    s = res.summary()
+    assert s["retries_by_tier"] == {CC: 1}
+    assert s["wasted_by_tier"][CC] == pytest.approx(3.0)
+
+
+# -------------------------------------------------- HedgingPolicy gate
+def _hedge_req(weight, projected_end, tier=CC, reserved_es=0.0):
+    job = JobSpec(name="J", release=0.0, weight=weight,
+                  proc={CC: 5.0, ES: 4.0, ED: 50.0},
+                  trans={CC: 2.0, ES: 1.0, ED: 0.0})
+    return HedgeRequest(ward=0, job=job, tier=tier,
+                        projected_end=projected_end,
+                        busy={CC: [], ES: []},
+                        reserved={CC: [0.0], ES: [reserved_es]},
+                        machines_per_tier={CC: 1, ES: 1})
+
+
+def test_hedging_policy_hedges_only_heaviest_class():
+    pol = HedgingPolicy(min_gain=2.0)
+    pol._see([JobSpec(name="H", release=0.0, weight=2.0,
+                      proc={CC: 1.0}, trans={CC: 0.0})])
+    assert pol.hedge(_hedge_req(1.0, projected_end=100.0), 0.0) is None
+    assert pol.hedge(_hedge_req(2.0, projected_end=100.0), 0.0) == ES
+
+
+def test_hedging_policy_declines_without_min_gain():
+    pol = HedgingPolicy(min_gain=2.0)
+    # best backup: edge, end = max(arr=1, free=0, now=0) + 4 = 5; the
+    # hedge needs projected_end > 5 + 2
+    assert pol.hedge(_hedge_req(1.0, projected_end=6.9), 0.0) is None
+    assert pol.hedge(_hedge_req(1.0, projected_end=7.1), 0.0) == ES
+    # a backed-up edge queue prices the backlog in
+    assert pol.hedge(_hedge_req(1.0, projected_end=7.1,
+                                reserved_es=50.0), 0.0) is None
+
+
+def test_hedging_policy_proxies_inner():
+    inner = TabuPolicy(jax_threshold=10 ** 9)
+    pol = HedgingPolicy(inner=inner)
+    assert pol.joint == inner.joint
+    assert pol.replans_on_fleet_events == inner.replans_on_fleet_events
+
+
+# --------------------------------------------- streaming tail counters
+def test_streaming_quantiles_counts_out_of_range():
+    q = StreamingQuantiles(1.0, 100.0, 8)
+    for x in (0.5, 0.9, 5.0, 50.0, 200.0):
+        q.add(x)
+    assert (q.underflow, q.overflow) == (2, 1)
+    other = StreamingQuantiles(1.0, 100.0, 8)
+    other.add(0.1)
+    other.add(1000.0)
+    q.merge(other)
+    assert (q.underflow, q.overflow) == (3, 2)
+
+
+def test_metrics_summary_surfaces_tail_counters():
+    m = MetroMetrics()
+    lo = m.total.lo
+    m.record(0.0, "alert", lo / 2.0, 100.0, CC, 1.0)
+    s = m.summary()
+    assert s["tail_underflow"] == 1 and s["tail_overflow"] == 0
+    assert "p999" in s and "p999_by_class" in s
+
+
+# ---------------------------------------------- fail_slow_tail pack
+def test_fail_slow_tail_pack_is_slowdowns_only():
+    sc = traces.make_scenario("fail_slow_tail", seed=0)
+    assert sc.slowdowns and not sc.failures
+    assert all(e.tier == ES and 0.0 < e.factor < 1.0
+               for e in sc.slowdowns)
+    assert [e.time for e in sc.slowdowns] == \
+        sorted(e.time for e in sc.slowdowns)
+
+
+@pytest.mark.slow
+def test_fail_slow_tail_hedged_ranking_invariant():
+    """The committed claim (DESIGN.md §13): under the canonical
+    fail_slow_tail pack, hedged tabu strictly beats unhedged tabu on
+    BOTH the life-critical miss rate and p99 — and the hedged run is
+    bit-identical across reruns with backups/cancellations in flight."""
+    sc = traces.make_scenario("fail_slow_tail", seed=0)
+    mpt = {CC: 2, ES: 2}
+
+    def run(hedged):
+        pol = TabuPolicy(jax_threshold=10 ** 9)
+        kw = {}
+        if hedged:
+            pol = HedgingPolicy(inner=pol)
+            kw["hedge_factor"] = 1.5
+        return simulate_metro(sc.traces, pol, machines_per_tier=mpt,
+                              slowdowns=sc.slowdowns, **kw)
+
+    base = run(False).summary()
+    h1, h2 = run(True), run(True)
+    assert h1.event_log == h2.event_log
+    hs = h1.summary()
+    assert hs["hedges"] > 0 and hs["hedge_wins"] > 0
+    assert hs["critical_miss_rate"] < base["critical_miss_rate"]
+    assert hs["p99"] < base["p99"]
+
+
+# ----------------------------------------- metro_hedging gate logic
+class TestHedgingGate:
+    """check_regression.py metro_hedging logic (no bench run)."""
+
+    def _mod(self):
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                        os.pardir, "benchmarks"))
+        try:
+            import check_regression
+        finally:
+            sys.path.pop(0)
+        return check_regression
+
+    def _reports(self):
+        base = {"metro_hedging": {"events_per_s": 10000.0,
+                                  "critical_improvement_hedge": 8.0,
+                                  "p99_improvement_hedge": 1.003}}
+        import copy
+        return base, copy.deepcopy(base)
+
+    def test_metric_extraction(self):
+        cr = self._mod()
+        committed, _ = self._reports()
+        assert cr._metro_hedging_metrics(committed) == {
+            "metro_hedging/events_per_s": 10000.0,
+            "metro_hedging/critical_improvement_hedge": 8.0,
+            "metro_hedging/p99_improvement_hedge": 1.003}
+
+    def test_identical_reports_pass(self):
+        cr = self._mod()
+        committed, fresh = self._reports()
+        assert cr.compare(committed, fresh) == []
+
+    def test_ranking_loss_fails_regardless_of_tolerance(self):
+        cr = self._mod()
+        for field in ("critical_improvement_hedge",
+                      "p99_improvement_hedge"):
+            committed, fresh = self._reports()
+            fresh["metro_hedging"][field] = 0.97
+            problems = cr.compare(committed, fresh, tolerance=100.0)
+            assert any("no longer beats unhedged" in p for p in problems)
+
+    def test_vacuous_critical_improvement_skipped(self):
+        cr = self._mod()
+        committed, fresh = self._reports()
+        fresh["metro_hedging"]["critical_improvement_hedge"] = None
+        assert cr.compare(committed, fresh, tolerance=0.30) == []
+
+    def test_events_floor_is_wall_clock_rerunnable(self):
+        cr = self._mod()
+        assert cr._is_wall_clock("metro_hedging/events_per_s")
+        assert not cr._is_wall_clock(
+            "metro_hedging/critical_improvement_hedge")
+        committed, fresh = self._reports()
+        key = "metro_hedging/events_per_s"
+        fresh["metro_hedging"]["events_per_s"] = 1000.0
+        assert cr.compare(committed, fresh) != []
+        assert cr.compare(committed, fresh, best={key: 9500.0}) == []
+
+
+# ------------------------------------------- fuzzed chaos invariants
+@pytest.mark.slow
+def test_fuzzed_event_interleavings_hold_engine_invariants():
+    """Random crash/slowdown/scale/network orderings: every policy —
+    hedged included — finishes every job completed-or-shed, never
+    consumes more machine-seconds than the fleet could deliver
+    (capacity-integral >= busy-time per shared pool), and replays
+    bit-identically on a fresh engine."""
+    mpt = {CC: 2, ES: 2}
+
+    def policies():
+        return (GreedyPolicy(),
+                TabuPolicy(jax_threshold=10 ** 9),
+                HedgingPolicy(inner=TabuPolicy(jax_threshold=10 ** 9),
+                              min_gain=1.0))
+
+    def check(rng):
+        horizon, wards = 30.0, 2
+        tr = traces.metro_traces(rng, wards, horizon, base_rate=0.15)
+        if not any(tr):
+            return
+        events = random_fleet_events(rng, horizon, wards)
+        for make in policies():
+            runs = []
+            for _ in range(2):
+                import copy
+                pol = copy.deepcopy(make)
+                kw = {"hedge_factor": 1.3} \
+                    if hasattr(pol, "hedge") else {}
+                eng = MetroEngine(tr, pol, machines_per_tier=mpt,
+                                  max_attempts=3, retry_backoff=1.0,
+                                  **events, **kw)
+                runs.append((eng, eng.run()))
+            (e1, r1), (_, r2) = runs
+            assert r1.event_log == r2.event_log, pol.name
+            m = r1.metrics
+            total = sum(len(t) for t in tr)
+            assert m.finished == total, pol.name
+            busy = m.busy_time
+            assert e1.cloud.capacity_integral(e1._t_end) >= \
+                busy.get(CC, 0.0) - 1e-6, pol.name
+            edge_cap = sum(p.capacity_integral(e1._t_end)
+                           for p in e1.edges)
+            assert edge_cap >= busy.get(ES, 0.0) - 1e-6, pol.name
+            for tier, u in r1.utilization.items():
+                if tier != "device_concurrency":
+                    assert u <= 1.0 + 1e-9, (pol.name, tier, u)
+
+    sweep(check, n_cases=6, seed=11)
