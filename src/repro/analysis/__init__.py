@@ -1,0 +1,12 @@
+"""Reprolint — determinism/invariant static analysis (DESIGN.md §14).
+
+Run it as ``python -m repro.analysis src``. The companion RUNTIME
+checker — the metro-engine sanitizer — lives in `repro.metro.sanitizer`
+and is enabled per run via ``MetroEngine.run(sanitize=True)``.
+"""
+from repro.analysis.linter import (FileContext, Finding, Rule, lint_file,
+                                   lint_paths)
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+__all__ = ["ALL_RULES", "RULES_BY_ID", "FileContext", "Finding", "Rule",
+           "lint_file", "lint_paths"]

@@ -89,15 +89,25 @@ class ModelConfig:
 
     def __post_init__(self):
         if self.num_groups == 0:
-            assert self.num_layers % len(self.group_pattern) == 0, (
-                self.name, self.num_layers, self.group_pattern)
+            if self.num_layers % len(self.group_pattern):
+                raise ValueError(
+                    f"{self.name}: num_layers {self.num_layers} not a "
+                    f"multiple of group_pattern {self.group_pattern}")
             object.__setattr__(self, "num_groups",
                                self.num_layers // len(self.group_pattern))
-        assert self.num_groups * len(self.group_pattern) == self.num_layers
+        if self.num_groups * len(self.group_pattern) != self.num_layers:
+            raise ValueError(
+                f"{self.name}: num_groups {self.num_groups} x pattern "
+                f"{self.group_pattern} != num_layers {self.num_layers}")
         for k in self.group_pattern:
-            assert k in BLOCK_KINDS, k
+            if k not in BLOCK_KINDS:
+                raise ValueError(f"{self.name}: unknown block kind {k!r} "
+                                 f"(known: {sorted(BLOCK_KINDS)})")
         if self.num_heads and self.num_kv_heads:
-            assert self.num_heads % self.num_kv_heads == 0
+            if self.num_heads % self.num_kv_heads:
+                raise ValueError(
+                    f"{self.name}: num_heads {self.num_heads} not a "
+                    f"multiple of num_kv_heads {self.num_kv_heads}")
 
     # ---- convenience ----
     @property

@@ -117,7 +117,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     b, hq, lq, d = q.shape
     _, hkv, lk, _ = k.shape
-    assert hq % hkv == 0, (hq, hkv)
+    if hq % hkv:
+        raise ValueError(f"GQA needs Hq % Hkv == 0, got ({hq}, {hkv})")
     group = hq // hkv
     if scale is None:
         scale = float(1.0 / (d ** 0.5))
@@ -125,7 +126,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret = jax.default_backend() != "tpu"
     bq = min(block_q, lq)
     bk = min(block_k, lk)
-    assert lq % bq == 0 and lk % bk == 0, (lq, bq, lk, bk)
+    if lq % bq or lk % bk:
+        raise ValueError(f"block sizes must divide sequence lengths: "
+                         f"Lq={lq} % {bq}, Lk={lk} % {bk}")
     num_qb, num_kb = lq // bq, lk // bk
     q_offset = lk - lq
 

@@ -59,14 +59,19 @@ def lstm_cell(x: jax.Array, h: jax.Array, c: jax.Array, wx: jax.Array,
     """
     bsz, i_dim = x.shape
     _, h_dim = h.shape
-    assert wx.shape == (i_dim, 4, h_dim), wx.shape
-    assert wh.shape == (h_dim, 4, h_dim), wh.shape
-    assert b.shape == (4, h_dim), b.shape
+    if wx.shape != (i_dim, 4, h_dim):
+        raise ValueError(f"wx shape {wx.shape} != {(i_dim, 4, h_dim)}")
+    if wh.shape != (h_dim, 4, h_dim):
+        raise ValueError(f"wh shape {wh.shape} != {(h_dim, 4, h_dim)}")
+    if b.shape != (4, h_dim):
+        raise ValueError(f"b shape {b.shape} != {(4, h_dim)}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     bb = min(block_b, bsz)
     bh = min(block_h, h_dim)
-    assert bsz % bb == 0 and h_dim % bh == 0
+    if bsz % bb or h_dim % bh:
+        raise ValueError(f"block sizes must divide dims: "
+                         f"B={bsz} % {bb}, H={h_dim} % {bh}")
 
     grid = (bsz // bb, h_dim // bh)
     return pl.pallas_call(

@@ -105,7 +105,9 @@ def mlstm_chunk(q: jax.Array, k: jax.Array, v: jax.Array, i_gate: jax.Array,
         interpret = jax.default_backend() != "tpu"
     t = min(chunk, l)
     bh = min(block_h, h)
-    assert l % t == 0 and h % bh == 0, (l, t, h, bh)
+    if l % t or h % bh:
+        raise ValueError(f"chunk/block must divide dims: "
+                         f"L={l} % {t}, H={h} % {bh}")
     nc, nh = l // t, h // bh
     scale = float(1.0 / (d ** 0.5))
 

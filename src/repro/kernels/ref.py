@@ -30,7 +30,8 @@ def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     b, hq, lq, d = q.shape
     _, hkv, lk, _ = k.shape
-    assert hq % hkv == 0
+    if hq % hkv:
+        raise ValueError(f"GQA needs Hq % Hkv == 0, got ({hq}, {hkv})")
     group = hq // hkv
     if scale is None:
         scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
@@ -72,7 +73,8 @@ def attention_blockwise(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     b, hq, lq, d = q.shape
     _, hkv, lk, _ = k.shape
-    assert hq % hkv == 0
+    if hq % hkv:
+        raise ValueError(f"GQA needs Hq % Hkv == 0, got ({hq}, {hkv})")
     group = hq // hkv
     if scale is None:
         scale = 1.0 / float(d) ** 0.5

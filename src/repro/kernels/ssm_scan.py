@@ -91,7 +91,9 @@ def ssm_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
         interpret = jax.default_backend() != "tpu"
     t = min(chunk, l)
     bh = min(block_h, h)
-    assert l % t == 0 and h % bh == 0, (l, t, h, bh)
+    if l % t or h % bh:
+        raise ValueError(f"chunk/block must divide dims: "
+                         f"L={l} % {t}, H={h} % {bh}")
     nc, nh = l // t, h // bh
 
     grid = (bsz, nh, nc)

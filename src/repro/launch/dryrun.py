@@ -177,13 +177,19 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
     cfg = variant_for_shape(get_config(arch), INPUT_SHAPES[shape_name])
     shape = INPUT_SHAPES[shape_name]
     if kv_int8:
-        assert shape.kind == "decode", "int8 KV is a decode-cache layout"
+        if shape.kind != "decode":
+            raise ValueError(f"int8 KV is a decode-cache layout, got "
+                             f"{shape.kind!r}")
         cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
     if moe_ep:
-        assert cfg.num_experts and shape.kind != "train", \
-            "EP MoE is an inference layout (dp-replicated expert storage)"
+        if not cfg.num_experts or shape.kind == "train":
+            raise ValueError("EP MoE is an inference layout "
+                             "(dp-replicated expert storage); needs "
+                             "num_experts > 0 and a non-train shape")
         model_axis = 16
-        assert model_axis % cfg.num_experts == 0
+        if model_axis % cfg.num_experts:
+            raise ValueError(f"model axis {model_axis} not a multiple "
+                             f"of num_experts {cfg.num_experts}")
         cfg = dataclasses.replace(
             cfg, moe_ep_shards=model_axis // cfg.num_experts)
     if microbatches is None:
@@ -198,12 +204,12 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
     # chunked state scans need the full sequence locally (seq-sharding
     # forced 11.3 GB/step of L-regathers on xlstm — §Perf iteration 2.5)
     residual = "replicated" if cfg.family in ("ssm", "hybrid") else "seq"
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh, policy.activation_policy(mesh, residual=residual):
         lowered = jax.jit(fn, in_shardings=shardings).lower(*specs)
-        t1 = time.time()
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        t2 = time.time()
+        t2 = time.perf_counter()
 
     mem = memory_dict(compiled)
     try:

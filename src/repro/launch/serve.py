@@ -247,7 +247,7 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
               edge_machines=2, policies=("greedy", "tabu", "fleet"),
               verbose=True, jax_threshold=None, scenario="default",
               check_determinism=False, hedge=False, hedge_factor=1.5,
-              retry_backoff=0.0, max_attempts=None):
+              retry_backoff=0.0, max_attempts=None, sanitize=False):
     """Metro traffic mode (DESIGN.md §10-§11): streaming patient-episode
     traffic over a ward fleet sharing one metropolitan cloud, replayed
     under each policy on identical traces, failures (drain or crash),
@@ -264,6 +264,13 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
     committed proc time (DESIGN.md §13); the table gains hedge/win/
     hedge-waste columns. retry_backoff / max_attempts bound crash
     retries (exponential backoff, shed-with-record past the cap).
+
+    sanitize=True arms the engine's runtime invariant sanitizer
+    (DESIGN.md §14) on every run: FIFO dispatch order, slot
+    double-booking, C2 immutability, event-time monotonicity, hedge
+    uniqueness, terminal accounting and capacity bounds are validated
+    per event, and the run fails on the first violation. The sanitizer
+    is read-only, so sanitized event logs hash bit-identically.
 
     check_determinism=True replays every policy twice on a fresh engine
     and raises unless the event logs hash identically — the seeded-chaos
@@ -307,7 +314,7 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
             sc.traces, pol, machines_per_tier=mpt, failures=sc.failures,
             scale_events=sc.scales, network_events=sc.network,
             slowdowns=sc.slowdowns, retry_backoff=retry_backoff,
-            max_attempts=max_attempts, **eng_kw)
+            max_attempts=max_attempts, sanitize=sanitize, **eng_kw)
 
     if verbose:
         kills = sum(f.kill_running for f in sc.failures)
@@ -430,6 +437,11 @@ def main():
                     help="with --metro: run every policy twice and fail "
                          "unless the event logs are bit-identical "
                          "(DESIGN.md §11)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="with --metro: run the engine with the runtime "
+                         "invariant sanitizer armed (FIFO dispatch, no "
+                         "slot double-booking, C2 immutability, ... — "
+                         "DESIGN.md §14); fails on the first violation")
     args = ap.parse_args()
     if args.contention and args.wards <= 0:
         ap.error("--contention requires --wards N (N > 0)")
@@ -445,7 +457,8 @@ def main():
                   check_determinism=args.check_determinism,
                   hedge=args.hedge, hedge_factor=args.hedge_factor,
                   retry_backoff=args.retry_backoff,
-                  max_attempts=args.max_attempts)
+                  max_attempts=args.max_attempts,
+                  sanitize=args.sanitize)
     elif args.wards > 0:
         run_wards(wards=args.wards, patients=args.patients,
                   horizon=args.horizon, seed=args.seed,

@@ -69,14 +69,14 @@ def main():
                                          microbatches=args.microbatches)
 
     batches = make_batches(cfg, args.batch, args.seq)
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh, policy.activation_policy(mesh):
         for i, batch in zip(range(args.steps), batches):
             params, opt_state, m = step_fn(params, opt_state, batch)
             if i % 10 == 0 or i == args.steps - 1:
                 print(f"step {i:5d} loss {float(m['loss']):.4f} "
                       f"lr {float(m['lr']):.2e} "
-                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
+                      f"({(time.perf_counter()-t0)/(i+1):.2f}s/step)")
             if args.checkpoint_dir and args.checkpoint_every and \
                     (i + 1) % args.checkpoint_every == 0:
                 checkpointer.save(args.checkpoint_dir, i + 1,

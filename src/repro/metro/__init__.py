@@ -35,10 +35,12 @@ from repro.metro.metrics import MetroMetrics
 from repro.metro.policies import (SHED, FleetPolicy, GreedyPolicy,
                                   HedgeRequest, HedgingPolicy, Policy,
                                   SheddingPolicy, TabuPolicy, make_policy)
+from repro.metro.sanitizer import MetroSanitizer, SanitizerViolation
 from repro.metro.traces import SCENARIO_PACKS, Scenario, make_scenario
 
 __all__ = ["FailureEvent", "MetroEngine", "MetroResult", "NetworkEvent",
            "ScaleEvent", "SlowdownEvent", "simulate_metro", "MetroMetrics",
            "SHED", "FleetPolicy", "GreedyPolicy", "HedgeRequest",
            "HedgingPolicy", "Policy", "SheddingPolicy", "TabuPolicy",
-           "make_policy", "SCENARIO_PACKS", "Scenario", "make_scenario"]
+           "make_policy", "MetroSanitizer", "SanitizerViolation",
+           "SCENARIO_PACKS", "Scenario", "make_scenario"]

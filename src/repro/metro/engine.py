@@ -385,6 +385,8 @@ class MetroEngine:
         self._events = 0
         self._t_end = 0.0
         self._ran = False
+        # read-only invariant observer, attached by run(sanitize=True)
+        self._san = None
         for b, trace in enumerate(self.jobs):
             for i, job in enumerate(trace):
                 self._push(job.release, _P_ARRIVE, ("arrive", b, i))
@@ -531,6 +533,8 @@ class MetroEngine:
                 if not is_hedge:
                     self._watchdog(b, i, c, now)
         pool.reserved = sorted(f for f, _ in heap)
+        if self._san is not None:
+            self._san.check_pool(pool, now)
 
     def _replay(self, now: float, edge_wards: Sequence[int] | None = None,
                 cloud: bool = True) -> None:
@@ -648,6 +652,8 @@ class MetroEngine:
         self.commits[b][i] = None
         self.metrics.record_shed(now, job.workload, job.weight)
         self.event_log.append(("shed", now, b, i, job.name))
+        if self._san is not None:
+            self._san.on_terminal(b, i, "shed")
 
     def _commit(self, b: int, i: int, shifted: JobSpec, tier: str,
                 now: float) -> None:
@@ -721,6 +727,8 @@ class MetroEngine:
         self.event_log.append(
             ("complete", now, b, i, c.machine, c.start, c.end, response,
              int(response > job.deadline), self.kills[b][i] + 1))
+        if self._san is not None:
+            self._san.on_terminal(b, i, "complete")
 
     def _cancel(self, now: float, b: int, i: int, loser: _Commit) -> None:
         """Deterministic cancellation rule (DESIGN.md §13): the losing
@@ -813,6 +821,8 @@ class MetroEngine:
                                          c.job.weight, exhausted=True)
                 self.event_log.append(("giveup", now, b, i, c.job.name,
                                        self.kills[b][i]))
+                if self._san is not None:
+                    self._san.on_terminal(b, i, "giveup")
                 continue
             if self.retry_backoff > 0.0:
                 # exponential backoff: attempt n re-decides after
@@ -913,6 +923,8 @@ class MetroEngine:
         self.hedged[b][i] = True
         self.metrics.record_hedge(t)
         self.event_log.append(("hedge", now, b, i, c.machine, t))
+        if self._san is not None:
+            self._san.on_hedge(b, i)
         arrival = now + spec.trans.get(t, 0.0)
         if t == ED:
             end = arrival + job.proc[ED]
@@ -995,14 +1007,28 @@ class MetroEngine:
             self._decide(range(self.B), now)
 
     # ---------------------------------------------------------------- run
-    def run(self) -> MetroResult:
+    def run(self, sanitize: bool = False) -> MetroResult:
+        """Drain the event heap. ``sanitize=True`` attaches the
+        read-only `MetroSanitizer` (DESIGN.md §14): every replay,
+        terminal event and hedge dispatch is validated against the
+        engine invariants I1–I7 and a `SanitizerViolation` is raised on
+        the first breach. The sanitizer never mutates state or touches
+        the event log, so sanitized runs hash bit-identically to
+        unsanitized ones."""
         if self._ran:
             raise ValueError("a MetroEngine instance runs once; build a "
                              "fresh one per policy")
         self._ran = True
-        t0 = time.perf_counter()
+        if sanitize:
+            from repro.metro.sanitizer import MetroSanitizer
+            self._san = MetroSanitizer(self)
+        # bench-timing block: measures wall-clock THROUGHPUT of the run;
+        # simulated time lives only in the event heap
+        t0 = time.perf_counter()        # reprolint: disable=R002
         while self._heap:
             t, prio, _, payload = heapq.heappop(self._heap)
+            if self._san is not None:
+                self._san.on_event(t, payload)
             self._t_end = max(self._t_end, t)
             self._events += 1
             kind = payload[0]
@@ -1028,8 +1054,10 @@ class MetroEngine:
                 self._on_hedge(t, *payload[1:])
             else:
                 self._on_recover(t, *payload[1:])
-        seconds = time.perf_counter() - t0
+        seconds = time.perf_counter() - t0   # reprolint: disable=R002
 
+        if self._san is not None:
+            self._san.at_exit(self._t_end)
         for b, flags in enumerate(self.finished):
             missing = [i for i, ok in enumerate(flags) if not ok]
             if missing:
@@ -1081,7 +1109,8 @@ def simulate_metro(ward_traces: Sequence[Sequence[JobSpec]],
                    retry_backoff: float = 0.0,
                    max_attempts: Union[int, Mapping[str, int],
                                        None] = None,
-                   metrics: MetroMetrics | None = None) -> MetroResult:
+                   metrics: MetroMetrics | None = None,
+                   sanitize: bool = False) -> MetroResult:
     """Build-and-run convenience wrapper (one engine per policy run)."""
     return MetroEngine(ward_traces, policy,
                        machines_per_tier=machines_per_tier,
@@ -1090,4 +1119,4 @@ def simulate_metro(ward_traces: Sequence[Sequence[JobSpec]],
                        slowdowns=slowdowns, hedge_factor=hedge_factor,
                        retry_backoff=retry_backoff,
                        max_attempts=max_attempts,
-                       metrics=metrics).run()
+                       metrics=metrics).run(sanitize=sanitize)

@@ -24,7 +24,9 @@ class EncDecModel:
     stub-encoder frame embeddings."""
 
     def __init__(self, cfg: ModelConfig, remat: bool = False):
-        assert cfg.is_encdec
+        if not cfg.is_encdec:
+            raise ValueError(f"{cfg.name}: EncDecModel needs "
+                             f"encoder_layers > 0")
         self.cfg = cfg
         self.encoder = TransformerStack(cfg, pattern=(base.ATTN,),
                                         num_groups=cfg.encoder_layers,

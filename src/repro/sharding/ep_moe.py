@@ -59,7 +59,9 @@ def ep_moe_ffn(experts, router, h, cfg, mesh):
     k = cfg.num_experts_per_tok
     m = mesh.shape["model"]
     r = cfg.moe_ep_shards
-    assert m == e * r, (m, e, r)
+    if m != e * r:
+        raise ValueError(f"EP MoE needs model axis == experts x shards, "
+                         f"got model={m}, experts={e}, shards={r}")
     d = cfg.d_model
     dp_axes = policy.fsdp_axes(mesh.axis_names)
     dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]

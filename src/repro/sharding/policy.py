@@ -55,7 +55,9 @@ class activation_policy:
         self.dp_size = int(np.prod([mesh.shape[a] for a in self.dp]))
         self.tp_size = int(np.prod([mesh.shape[a] for a in self.tp])) \
             if self.tp else 1
-        assert residual in ("seq", "replicated")
+        if residual not in ("seq", "replicated"):
+            raise ValueError(f"residual must be 'seq' or 'replicated', "
+                             f"got {residual!r}")
         self.residual = residual
         self.mesh = mesh
 

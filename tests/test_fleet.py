@@ -322,21 +322,39 @@ class TestRunWards:
 @pytest.mark.slow
 def test_guards_survive_python_O():
     """The length/size guards converted from assert must still raise
-    under ``python -O`` (which strips asserts)."""
+    under ``python -O`` (which strips asserts) — core scheduling plus
+    every module the R001 reprolint sweep converted (kernels, models,
+    configs, sharding, launch; DESIGN.md §14)."""
     code = """
+import dataclasses
 import sys
 sys.path.insert(0, sys.argv[1])
+import jax.numpy as jnp
+from repro.configs import get_config
 from repro.core import scheduler
 from repro.core.simulator import JobSpec, ScheduleState, simulate
 from repro.core.tiers import CC, ED, ES
+from repro.kernels import (flash_attention, lstm_cell, mlstm_chunk, ref,
+                           ssm_scan)
+from repro.launch import dryrun
+from repro.models.encdec import EncDecModel
+from repro.sharding import ep_moe, policy
 assert not __debug__, "run me with -O"
 job = JobSpec(name="J", release=0.0, weight=1.0,
               proc={CC: 1.0, ES: 1.0, ED: 1.0},
               trans={CC: 0.0, ES: 0.0, ED: 0.0})
+cfg = get_config("qwen2-1.5b")
+z = jnp.zeros
 for fn in (lambda: simulate([job], []),
            lambda: ScheduleState([job], []),
            lambda: simulate([job], ["moon"]),
-           lambda: scheduler.exact_optimum([job] * 13)):
+           lambda: scheduler.exact_optimum([job] * 13),
+           # converted R001 guards (group pattern / enc-dec / wx shape)
+           lambda: dataclasses.replace(cfg, num_groups=cfg.num_layers + 1),
+           lambda: EncDecModel(cfg),
+           lambda: lstm_cell.lstm_cell(z((4, 8)), z((4, 8)), z((4, 8)),
+                                       z((8, 3, 8)), z((8, 4, 8)),
+                                       z((4, 8)))):
     try:
         fn()
     except ValueError:
