@@ -54,7 +54,14 @@ hardware — regenerate the baseline when the CI host changes):
     beat the unhedged run on BOTH the life-critical miss rate
     (``critical_improvement_hedge`` > 1; None is vacuous — the unhedged
     run missed nothing) and the p99 response
-    (``p99_improvement_hedge`` > 1), at any tolerance.
+    (``p99_improvement_hedge`` > 1), at any tolerance;
+  * metro_observability (DESIGN.md §15): ``events_per_s_retention`` —
+    the armed flight recorder's throughput as a fraction of the
+    untraced run over every chaos pack; plus hard invariants whenever a
+    fresh section exists — per-pack ``crc_parity`` must be True (the
+    tracer is a read-only observer: a traced run's event log must hash
+    bit-identically to the untraced run's) and the retention must stay
+    above 1/1.15 (recording may cost at most 15%), at any tolerance.
 
 Wall-clock throughput floors (events/s, wards/s, speedups) are prone to
 host-throttling flakes: ``--runs N`` re-measures ONLY the failed
@@ -78,7 +85,8 @@ import tempfile
 # metrics measured from wall-clock timings (rerunnable via --runs);
 # everything else is deterministic quality and stays single-shot
 _WALL_CLOCK_TOKENS = ("events_per_s", "wards_per_s", "speedup",
-                      "jax_vs_incremental", "fraction_of_batched")
+                      "jax_vs_incremental", "fraction_of_batched",
+                      "retention")
 
 
 def _is_wall_clock(key: str) -> bool:
@@ -159,10 +167,19 @@ def _metro_hedging_metrics(report: dict) -> dict:
     return out
 
 
+def _metro_observability_metrics(report: dict) -> dict:
+    m = report.get("metro_observability") or {}
+    out = {}
+    if m.get("events_per_s_retention"):
+        out["metro_observability/events_per_s_retention"] = \
+            m["events_per_s_retention"]
+    return out
+
+
 _METRIC_FNS = (_head_to_head_metrics, _batched_metrics,
                _contention_metrics, _contention_interval_metrics,
                _metro_metrics, _metro_scenario_metrics,
-               _metro_hedging_metrics)
+               _metro_hedging_metrics, _metro_observability_metrics)
 
 
 def compare(committed: dict, fresh: dict, tolerance: float = 0.30,
@@ -273,6 +290,28 @@ def compare(committed: dict, fresh: dict, tolerance: float = 0.30,
                     f"metro_hedging/{field}: {got:.3g} <= 1 (hedged tabu "
                     f"no longer beats unhedged on {label} under "
                     f"fail_slow_tail)")
+    # observability invariants (DESIGN.md §15): the flight recorder is a
+    # read-only observer — a traced run's event log must hash
+    # bit-identically to the untraced run's on every pack — and the
+    # armed recorder may cost at most 15% throughput (retention >
+    # 1/1.15). Parity is never a flake; the retention bound IS
+    # wall-clock, so it honors --runs best-of re-measurement.
+    mo = fresh.get("metro_observability") or {}
+    if mo:
+        for pack in sorted(mo.get("packs") or {}):
+            if not mo["packs"][pack].get("crc_parity", False):
+                problems.append(
+                    f"metro_observability/{pack}/crc_parity: False "
+                    f"(traced event log diverged from the untraced run "
+                    f"- the tracer mutated engine state)")
+        key = "metro_observability/events_per_s_retention"
+        ret = mo.get("events_per_s_retention", 0.0)
+        if best and best.get(key, ret) > ret:
+            ret = best[key]
+        if not ret > 1.0 / 1.15:
+            problems.append(
+                f"{key}: {ret:.3g} <= {1.0 / 1.15:.3g} (armed flight "
+                f"recorder costs more than 1.15x throughput)")
     return problems
 
 
@@ -301,6 +340,8 @@ def _remeasure(failed_keys) -> dict:
         partial["metro"] = ss.bench_metro()
     if "metro_hedging" in sections:
         partial["metro_hedging"] = ss.bench_metro_hedging()
+    if "metro_observability" in sections:
+        partial["metro_observability"] = ss.bench_metro_observability()
     if packs:
         partial["metro_scenarios"] = ss.bench_metro_scenarios(
             packs=sorted(packs))

@@ -336,6 +336,9 @@ def bench_metro(wards=4, hours=2.0, seed=0):
         "p50": {k: v["p50"] for k, v in out.items()},
         "p99": {k: v["p99"] for k, v in out.items()},
         "utilization_tabu": t["utilization"],
+        # §3.3 bucketed-dispatch cache counters after the three runs —
+        # `serve --metro` prints the same line (PR 10, DESIGN.md §15)
+        "compiled_shapes": scheduler.compiled_shape_stats(),
     }
 
 
@@ -440,6 +443,72 @@ def bench_metro_hedging(seed=0):
     }
 
 
+def bench_metro_observability(seed=0):
+    """Flight-recorder cost + parity (DESIGN.md §15): every chaos pack
+    replayed twice under tabu-replan (hedged on `fail_slow_tail`, whose
+    races exercise the hedge spans) — once untraced, once with the
+    tracer armed — on identical traces/failures/windows.
+
+    Guarded: per-pack ``crc_parity`` (the traced run's event log must
+    hash bit-identically to the untraced run's — the tracer is a
+    read-only observer; a HARD invariant in check_regression.py) and
+    the aggregate ``events_per_s_retention`` (traced throughput as a
+    fraction of untraced over all packs), which the gate holds above
+    1/1.15: the armed recorder may cost at most 15%. The search backend
+    is pinned to the Python path so both runs replay identical
+    decisions (metro.engine's determinism note)."""
+    import zlib
+
+    from repro.metro import (HedgingPolicy, make_policy, simulate_metro,
+                             traces)
+
+    packs = CHAOS_PACKS + ("fail_slow_tail",)
+    mpt = {CC: 2, ES: 2}
+    out = {"seed": seed, "packs": {}}
+    sec_untraced = sec_traced = events_total = 0.0
+    spans_total = 0
+    for pack in packs:
+        sc = traces.make_scenario(pack, seed)
+        hedged = pack == "fail_slow_tail"
+
+        def one(traced):
+            pol = make_policy("tabu", jax_threshold=10 ** 9)
+            kw = {}
+            if hedged:
+                pol = HedgingPolicy(inner=pol)
+                kw["hedge_factor"] = 1.5
+            return simulate_metro(
+                sc.traces, pol, machines_per_tier=mpt,
+                failures=sc.failures, scale_events=sc.scales,
+                network_events=sc.network, slowdowns=sc.slowdowns,
+                trace=traced, **kw)
+
+        one(False)      # warm-up: first replay of a pack pays cold-start
+        base, traced = one(False), one(True)
+        sb, st = base.summary(), traced.summary()
+        parity = zlib.crc32(repr(base.event_log).encode()) \
+            == zlib.crc32(repr(traced.event_log).encode())
+        out["packs"][pack] = {
+            "hedged": hedged,
+            "jobs": st["completions"] + st["shed"],
+            "events": st["events"],
+            "spans": len(traced.trace.spans),
+            "crc_parity": bool(parity),
+            "events_per_s_untraced": sb["events_per_s"],
+            "events_per_s_traced": st["events_per_s"],
+            "retention": st["events_per_s"] / sb["events_per_s"],
+        }
+        events_total += st["events"]
+        spans_total += len(traced.trace.spans)
+        sec_untraced += sb["events"] / sb["events_per_s"]
+        sec_traced += st["events"] / st["events_per_s"]
+    out.update(
+        events=int(events_total), spans=spans_total,
+        crc_parity_all=all(p["crc_parity"] for p in out["packs"].values()),
+        events_per_s_retention=sec_untraced / sec_traced)
+    return out
+
+
 def bench_online_fleet(seeds=3, wards=4, n=10, cloud_machines=2,
                        edge_machines=2):
     """Online fleet replanning vs the clairvoyant fixed point
@@ -474,7 +543,8 @@ def bench_scheduler_scale(with_online_scenarios: bool = False,
     report = {"bench": "scheduler_scale", "backend": jax.default_backend(),
               "head_to_head": [], "eval_throughput": {}, "quality": {},
               "online": {}, "batched": {}, "contention": {},
-              "contention_interval": {}, "metro": {}, "metro_hedging": {}}
+              "contention_interval": {}, "metro": {}, "metro_hedging": {},
+              "metro_observability": {}}
 
     # 1) Algorithm-2 head-to-head across implementations and scales
     for row in bench_head_to_head():
@@ -650,6 +720,19 @@ def bench_scheduler_scale(with_online_scenarios: bool = False,
         f"hedges={mh['hedges']};wins={mh['hedge_wins']};"
         f"hedge_waste={mh['hedge_waste']:.1f};"
         f"events_per_s={mh['events_per_s']:.0f}")
+
+    # 5f) flight-recorder overhead + traced/untraced CRC parity
+    # (DESIGN.md §15)
+    report["metro_observability"] = bench_metro_observability()
+    mo = report["metro_observability"]
+    rows.append(("metro_observability", mo["events"], 0.0,
+                 mo["events_per_s_retention"]))
+    csv.append(
+        f"sched_metro_observability,0,"
+        f"packs={len(mo['packs'])};"
+        f"spans={mo['spans']};"
+        f"crc_parity={mo['crc_parity_all']};"
+        f"events_per_s_retention={mo['events_per_s_retention']:.3f}")
 
     # 6) per-scenario online competitive ratios (slower; gated by --online)
     if with_online_scenarios:

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import zlib
 
 import jax
@@ -243,11 +244,22 @@ def run_wards(wards=4, patients=10, horizon=30.0, seed=0,
     return schedules, seconds
 
 
+def _trace_path(base: str, policy: str, multi: bool) -> str:
+    """Per-policy trace file name: the given path verbatim for a single
+    policy, `name.<policy>.ext` when several policies share one run."""
+    if not multi:
+        return base
+    root, dot, ext = base.rpartition(".")
+    return f"{root}.{policy}.{ext}" if dot else f"{base}.{policy}"
+
+
 def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
               edge_machines=2, policies=("greedy", "tabu", "fleet"),
               verbose=True, jax_threshold=None, scenario="default",
               check_determinism=False, hedge=False, hedge_factor=1.5,
-              retry_backoff=0.0, max_attempts=None, sanitize=False):
+              retry_backoff=0.0, max_attempts=None, sanitize=False,
+              trace=None, trace_format="jsonl", postmortem=False,
+              postmortem_out=None, metrics_out=None):
     """Metro traffic mode (DESIGN.md §10-§11): streaming patient-episode
     traffic over a ward fleet sharing one metropolitan cloud, replayed
     under each policy on identical traces, failures (drain or crash),
@@ -277,7 +289,20 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
     determinism contract (DESIGN.md §11). The search backend is pinned
     to the Python path when no jax_threshold is given, because the
     compiled-shape cache is call-order-dependent across runs in one
-    process (see metro.engine's determinism note).
+    process (see metro.engine's determinism note). The verification
+    rerun is UNTRACED, so with `trace` set the hash comparison doubles
+    as a live traced-vs-untraced CRC-parity check (DESIGN.md §15).
+
+    trace=PATH arms the flight recorder (DESIGN.md §15) and writes each
+    policy's span stream there — `trace_format` "jsonl" (one span per
+    line) or "chrome" (trace-event JSON, opens in Perfetto); several
+    policies write `name.<policy>.ext` each. postmortem=True prints the
+    deadline-miss blame table (exact per-job response decomposition into
+    retry-waste / wait / transmit / service / slowdown) plus the engine
+    self-profile; postmortem_out=PATH exports the same as JSON.
+    metrics_out=PATH dumps the full per-policy summary dicts (every
+    MetroMetrics.summary() column, incl. per-tier retry/waste/hedge
+    breakdowns, p99.9s and the windowed recent_* snapshot) as JSON.
 
     One trace time unit reads as one minute; episodes are the paper's
     three-app cascade with per-class response deadlines
@@ -302,7 +327,11 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
                             jax_threshold=jax_threshold),
               "tabu": dict(jax_threshold=jax_threshold)}
 
-    def one_run(name):
+    want_trace = trace is not None or postmortem or \
+        postmortem_out is not None
+    want_profile = postmortem or postmortem_out is not None
+
+    def one_run(name, traced=False):
         # a fresh policy per run: policies may carry stream state (the
         # shedding wrapper's running max weight, the hedging wrapper's)
         pol = make_policy(name, **kwargs.get(name, {}))
@@ -314,7 +343,8 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
             sc.traces, pol, machines_per_tier=mpt, failures=sc.failures,
             scale_events=sc.scales, network_events=sc.network,
             slowdowns=sc.slowdowns, retry_backoff=retry_backoff,
-            max_attempts=max_attempts, sanitize=sanitize, **eng_kw)
+            max_attempts=max_attempts, sanitize=sanitize,
+            trace=traced, profile=traced and want_profile, **eng_kw)
 
     if verbose:
         kills = sum(f.kill_running for f in sc.failures)
@@ -332,8 +362,9 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
               f"{'edge':>6s} {'rtry':>4s} {'waste':>6s}"
               f"{hedge_cols} {'events/s':>9s}")
     out = {}
+    traced_runs = {}
     for name in policies:
-        res = one_run(name)
+        res = one_run(name, traced=want_trace)
         log_hash = zlib.crc32(repr(res.event_log).encode())
         if check_determinism:
             rerun_hash = zlib.crc32(repr(one_run(name).event_log).encode())
@@ -344,7 +375,13 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
                     f"{rerun_hash:#x})")
         s = res.summary()
         s["event_log_hash"] = log_hash
+        # global cumulative §3.3 shape-cache counters at this point of
+        # the process — evictions staying 0 is a gate invariant, so it
+        # belongs where users look, not only in the benchmark
+        s["compiled_shapes"] = scheduler.compiled_shape_stats()
         out[name] = s
+        if res.trace is not None:
+            traced_runs[name] = res
         if verbose:
             util = s["utilization"]
             rbt, wbt = s["retries_by_tier"], s["wasted_by_tier"]
@@ -375,6 +412,37 @@ def run_metro(wards=None, hours=None, seed=0, cloud_machines=2,
             jobs_done = max(out["greedy"]["completions"], 1)
             print(f"tabu-replan miss-rate improvement vs greedy: "
                   f"{g / max(t, 0.5 / jobs_done):.2f}x")
+    if verbose:
+        cs = scheduler.compiled_shape_stats()
+        print(f"compiled shapes: size={cs['size']} hits={cs['hits']} "
+              f"misses={cs['misses']} evictions={cs['evictions']}")
+    if trace is not None:
+        multi = len(traced_runs) > 1
+        for name, res in traced_runs.items():
+            path = _trace_path(trace, name, multi)
+            n = res.trace.write(path, trace_format)
+            if verbose:
+                unit = "events" if trace_format == "chrome" else "spans"
+                print(f"trace[{name}]: {n} {unit} ({trace_format}) "
+                      f"-> {path}")
+    if postmortem and verbose:
+        for name, res in traced_runs.items():
+            print(res.trace.format_postmortem(
+                name, res.profile,
+                out[name].get("compiled_shapes")))
+    if postmortem_out is not None:
+        report = {name: res.trace.postmortem_json(
+            name, res.profile, out[name].get("compiled_shapes"))
+            for name, res in traced_runs.items()}
+        with open(postmortem_out, "w") as f:
+            json.dump(report, f, indent=2)
+        if verbose:
+            print(f"postmortem JSON -> {postmortem_out}")
+    if metrics_out is not None:
+        with open(metrics_out, "w") as f:
+            json.dump(out, f, indent=2)
+        if verbose:
+            print(f"metrics JSON -> {metrics_out}")
     return out
 
 
@@ -442,6 +510,25 @@ def main():
                          "invariant sanitizer armed (FIFO dispatch, no "
                          "slot double-booking, C2 immutability, ... — "
                          "DESIGN.md §14); fails on the first violation")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --metro: arm the flight recorder and "
+                         "write per-job span streams here (per-policy "
+                         "suffix when several policies run — "
+                         "DESIGN.md §15)")
+    ap.add_argument("--trace-format", choices=("jsonl", "chrome"),
+                    default="jsonl",
+                    help="trace file format: jsonl spans, or Chrome "
+                         "trace-event JSON for Perfetto/chrome://tracing")
+    ap.add_argument("--postmortem", action="store_true",
+                    help="with --metro: print the deadline-miss blame "
+                         "table (exact response-time decomposition per "
+                         "class x tier) and the engine self-profile")
+    ap.add_argument("--postmortem-out", default=None, metavar="PATH",
+                    help="write the postmortem attribution report "
+                         "(per-job terms, blame table, profile) as JSON")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="with --metro: dump the full per-policy "
+                         "MetroMetrics.summary() dicts as JSON")
     args = ap.parse_args()
     if args.contention and args.wards <= 0:
         ap.error("--contention requires --wards N (N > 0)")
@@ -458,7 +545,11 @@ def main():
                   hedge=args.hedge, hedge_factor=args.hedge_factor,
                   retry_backoff=args.retry_backoff,
                   max_attempts=args.max_attempts,
-                  sanitize=args.sanitize)
+                  sanitize=args.sanitize,
+                  trace=args.trace, trace_format=args.trace_format,
+                  postmortem=args.postmortem,
+                  postmortem_out=args.postmortem_out,
+                  metrics_out=args.metrics_out)
     elif args.wards > 0:
         run_wards(wards=args.wards, patients=args.patients,
                   horizon=args.horizon, seed=args.seed,

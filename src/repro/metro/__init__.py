@@ -26,7 +26,13 @@ Three layers over the core scheduling machinery:
     response (overall and per class), deadline miss-rate per workload
     class (shed jobs are explicit misses), crash-retry/wasted-work and
     hedge counters broken out per tier, per-tier utilisation, all O(1)
-    memory over unbounded runs.
+    memory over unbounded runs;
+  * `tracing`  — the flight recorder (DESIGN.md §15): per-job span
+    trees (decision/backoff/wait/transmit/service with fail-slow
+    segment splits, hedge races, terminal outcomes) derived from the
+    event stream with bit-identical CRCs, an exact additive
+    deadline-miss attribution (blame table per class x tier), engine
+    self-profiling, and JSONL / Chrome-trace (Perfetto) exporters.
 """
 from repro.metro.engine import (FailureEvent, MetroEngine, MetroResult,
                                 NetworkEvent, ScaleEvent, SlowdownEvent,
@@ -37,10 +43,13 @@ from repro.metro.policies import (SHED, FleetPolicy, GreedyPolicy,
                                   SheddingPolicy, TabuPolicy, make_policy)
 from repro.metro.sanitizer import MetroSanitizer, SanitizerViolation
 from repro.metro.traces import SCENARIO_PACKS, Scenario, make_scenario
+from repro.metro.tracing import (TERMS, EngineProfile, MetroTrace,
+                                 MetroTracer, Span)
 
 __all__ = ["FailureEvent", "MetroEngine", "MetroResult", "NetworkEvent",
            "ScaleEvent", "SlowdownEvent", "simulate_metro", "MetroMetrics",
            "SHED", "FleetPolicy", "GreedyPolicy", "HedgeRequest",
            "HedgingPolicy", "Policy", "SheddingPolicy", "TabuPolicy",
            "make_policy", "MetroSanitizer", "SanitizerViolation",
-           "SCENARIO_PACKS", "Scenario", "make_scenario"]
+           "SCENARIO_PACKS", "Scenario", "make_scenario",
+           "TERMS", "EngineProfile", "MetroTrace", "MetroTracer", "Span"]

@@ -290,7 +290,9 @@ class _Pool:
 class MetroResult:
     """One policy's run: verbatim committed schedules per ward, streaming
     metrics, exact per-tier utilisation, the deterministic event log, and
-    the wall-clock throughput of the run."""
+    the wall-clock throughput of the run. `trace` carries the flight
+    recorder's `MetroTrace` when the run was traced (§15), `profile` the
+    self-profiling summary dict when profiled — both None otherwise."""
     policy: str
     wards: List[Schedule]
     metrics: MetroMetrics
@@ -298,6 +300,8 @@ class MetroResult:
     event_log: List[tuple]
     events: int
     seconds: float
+    trace: Optional[object] = None
+    profile: Optional[dict] = None
 
     @property
     def events_per_s(self) -> float:
@@ -387,6 +391,11 @@ class MetroEngine:
         self._ran = False
         # read-only invariant observer, attached by run(sanitize=True)
         self._san = None
+        # read-only flight recorder / self-profiler, attached by
+        # run(trace=True) / run(profile=True) — both None when off, so
+        # the off path costs one attribute test per observation
+        self._tracer = None
+        self._prof = None
         for b, trace in enumerate(self.jobs):
             for i, job in enumerate(trace):
                 self._push(job.release, _P_ARRIVE, ("arrive", b, i))
@@ -419,6 +428,14 @@ class MetroEngine:
     def _push(self, t: float, prio: int, payload: tuple) -> None:
         self._seq += 1
         heapq.heappush(self._heap, (t, prio, self._seq, payload))
+
+    def _log(self, rec: tuple) -> None:
+        """Append one event-log record and mirror it to the flight
+        recorder. The tracer only ever READS the record — the log bytes
+        (and hence the run's CRC) are identical traced or not."""
+        self.event_log.append(rec)
+        if self._tracer is not None:
+            self._tracer.on_log(rec)
 
     def _pool(self, tier: str, ward: Optional[int]) -> _Pool:
         if tier == CC:
@@ -507,6 +524,8 @@ class MetroEngine:
         (arrival, plan time, ward, index) over the slot free times —
         `simulate`'s C5 semantics with machine identity. Started jobs are
         untouched (C2); re-timed jobs get fresh completion events."""
+        if self._prof is not None:
+            _r0 = time.perf_counter()          # reprolint: disable=R002
         free = self._slot_frees(pool, now)
         queue = []
         for b, i, c, is_hedge in self._pool_entries(pool):
@@ -533,8 +552,17 @@ class MetroEngine:
                 if not is_hedge:
                     self._watchdog(b, i, c, now)
         pool.reserved = sorted(f for f, _ in heap)
+        if self._prof is not None:
+            self._prof.replay += (
+                time.perf_counter() - _r0)     # reprolint: disable=R002
         if self._san is not None:
-            self._san.check_pool(pool, now)
+            if self._prof is not None:
+                _s0 = time.perf_counter()      # reprolint: disable=R002
+                self._san.check_pool(pool, now)
+                self._prof.sanitize += (
+                    time.perf_counter() - _s0)  # reprolint: disable=R002
+            else:
+                self._san.check_pool(pool, now)
 
     def _replay(self, now: float, edge_wards: Sequence[int] | None = None,
                 cloud: bool = True) -> None:
@@ -621,7 +649,14 @@ class MetroEngine:
                 background=[spec for c, j, spec in cloud_queue
                             if c != b or j not in mov]))
         if requests:
-            decisions = self.policy.decide(requests, now)
+            if self._prof is not None:
+                _p0 = time.perf_counter()      # reprolint: disable=R002
+                decisions = self.policy.decide(requests, now)
+                self._prof.policy += (
+                    time.perf_counter() - _p0)  # reprolint: disable=R002
+                self._prof.decide_calls += 1
+            else:
+                decisions = self.policy.decide(requests, now)
             if len(decisions) != len(requests):
                 raise ValueError(f"policy returned {len(decisions)} plans "
                                  f"for {len(requests)} wards")
@@ -651,7 +686,7 @@ class MetroEngine:
         self.finished[b][i] = True
         self.commits[b][i] = None
         self.metrics.record_shed(now, job.workload, job.weight)
-        self.event_log.append(("shed", now, b, i, job.name))
+        self._log(("shed", now, b, i, job.name))
         if self._san is not None:
             self._san.on_terminal(b, i, "shed")
 
@@ -659,6 +694,8 @@ class MetroEngine:
                 now: float) -> None:
         job = self.jobs[b][i]
         arrival = now + shifted.trans.get(tier, 0.0)
+        if self._tracer is not None:
+            self._tracer.on_commit(now, b, i, tier, arrival)
         if tier == ED:
             # private device: no queue, times final at commitment (C4)
             end = arrival + job.proc[ED]
@@ -680,7 +717,7 @@ class MetroEngine:
     # ------------------------------------------------------------- events
     def _on_arrive(self, now: float, b: int, i: int) -> None:
         self.pending[b].append(i)
-        self.event_log.append(("arrive", now, b, i, self.jobs[b][i].name))
+        self._log(("arrive", now, b, i, self.jobs[b][i].name))
         wards = range(self.B) if self.policy.joint else [b]
         self._decide(wards, now, fresh={b: [i]})
 
@@ -704,7 +741,7 @@ class MetroEngine:
         del self.hedges[(b, i)]
         self.commits[b][i] = h
         if loser is not None:                        # pragma: no branch
-            self._cancel(now, b, i, loser)
+            self._cancel(now, b, i, loser, role="primary")
         self._finish(now, b, i, h, hedge_win=True)
 
     def _finish(self, now: float, b: int, i: int, c: _Commit,
@@ -724,22 +761,28 @@ class MetroEngine:
                             hedged=self.hedged[b][i],
                             hedge_win=hedge_win or
                             (b, i) in self.promoted)
-        self.event_log.append(
+        self._log(
             ("complete", now, b, i, c.machine, c.start, c.end, response,
              int(response > job.deadline), self.kills[b][i] + 1))
         if self._san is not None:
             self._san.on_terminal(b, i, "complete")
+        if self._tracer is not None:
+            self._tracer.on_finish(now, b, i, c, hedge_win)
 
-    def _cancel(self, now: float, b: int, i: int, loser: _Commit) -> None:
+    def _cancel(self, now: float, b: int, i: int, loser: _Commit,
+                role: str = "backup") -> None:
         """Deterministic cancellation rule (DESIGN.md §13): the losing
         attempt is cut at the WINNER's completion instant — never
         earlier, never by wall clock — its consumed service units are
         recorded as hedge waste, and its pool is replayed so queued
-        successors reclaim the freed machine-seconds immediately."""
+        successors reclaim the freed machine-seconds immediately.
+        `role` names which side of the race lost (tracing only)."""
         wasted = self._elapsed_work(b, loser, now) \
             if loser.start <= now else 0.0
+        if self._tracer is not None:
+            self._tracer.on_hedge_cancel(now, b, i, loser, wasted, role)
         self.metrics.record_hedge_cancel(loser.machine, wasted)
-        self.event_log.append(
+        self._log(
             ("hedge_cancel", now, b, i, loser.machine, wasted))
         if loser.machine != ED:
             self._replay(now, edge_wards=[b] if loser.machine == ES
@@ -764,7 +807,7 @@ class MetroEngine:
         ward_key = -1 if ev.ward is None else ev.ward
         kill_flag = int(ev.kill_running)
         if k is None:                      # every machine already retired
-            self.event_log.append(("fail", now, ev.tier, ward_key, -1,
+            self._log(("fail", now, ev.tier, ward_key, -1,
                                    now, kill_flag))
             return
         slot = pool.slots[k]
@@ -782,7 +825,7 @@ class MetroEngine:
         down_until = base + ev.duration
         slot.down = max(slot.down, down_until)
         slot.outages.append((base, down_until))
-        self.event_log.append(("fail", now, ev.tier, ward_key, k,
+        self._log(("fail", now, ev.tier, ward_key, k,
                                down_until, kill_flag))
         fresh: Dict[int, List[int]] = {}
         for b, i, c, is_hedge in killed:
@@ -791,14 +834,19 @@ class MetroEngine:
                 # the crash took the backup attempt: the primary still
                 # runs, so this is a cancellation, not a job loss
                 del self.hedges[(b, i)]
+                if self._tracer is not None:
+                    self._tracer.on_hedge_cancel(now, b, i, c, wasted,
+                                                 "backup")
                 self.metrics.record_hedge_cancel(ev.tier, wasted)
-                self.event_log.append(
+                self._log(
                     ("hedge_cancel", now, b, i, ev.tier, wasted))
                 continue
             self.kills[b][i] += 1
             self.metrics.record_kill(ev.tier, wasted)
-            self.event_log.append(("kill", now, b, i, ev.tier, k, wasted,
+            self._log(("kill", now, b, i, ev.tier, k, wasted,
                                    self.kills[b][i]))
+            if self._tracer is not None:
+                self._tracer.on_kill(now, b, i, c, wasted)
             backup = self.hedges.pop((b, i), None)
             if backup is not None:
                 # the backup attempt survives the crash: promote it to
@@ -807,7 +855,7 @@ class MetroEngine:
                 if backup.end < _INF:        # pragma: no branch
                     self._push(backup.end, _P_COMPLETE,
                                ("complete", b, i, backup.end))
-                self.event_log.append(
+                self._log(
                     ("hedge_promote", now, b, i, backup.machine))
                 self.promoted.add((b, i))
                 continue
@@ -819,7 +867,7 @@ class MetroEngine:
                 self.finished[b][i] = True
                 self.metrics.record_shed(now, c.job.workload,
                                          c.job.weight, exhausted=True)
-                self.event_log.append(("giveup", now, b, i, c.job.name,
+                self._log(("giveup", now, b, i, c.job.name,
                                        self.kills[b][i]))
                 if self._san is not None:
                     self._san.on_terminal(b, i, "giveup")
@@ -842,7 +890,7 @@ class MetroEngine:
         normal decision path as a fresh arrival."""
         if self.finished[b][i] or self.commits[b][i] is not None:
             return                               # pragma: no cover (safety)
-        self.event_log.append(("retry", now, b, i, self.kills[b][i] + 1))
+        self._log(("retry", now, b, i, self.kills[b][i] + 1))
         if i not in self.pending[b]:
             self.pending[b].append(i)
         wards = range(self.B) if self.policy.joint else [b]
@@ -858,12 +906,12 @@ class MetroEngine:
         ward_key = -1 if ev.ward is None else ev.ward
         until = now + ev.duration
         if k is None:                      # every machine already retired
-            self.event_log.append(("slow", now, ev.tier, ward_key, -1,
+            self._log(("slow", now, ev.tier, ward_key, -1,
                                    until, ev.factor))
             return
         slot = pool.slots[k]
         slot.slowdowns.append((now, until, ev.factor))
-        self.event_log.append(("slow", now, ev.tier, ward_key, k, until,
+        self._log(("slow", now, ev.tier, ward_key, k, until,
                                ev.factor))
         for b, i, c, is_hedge in self._pool_entries(pool):
             if self.finished[b][i] or c.slot != k or \
@@ -885,7 +933,7 @@ class MetroEngine:
         """A fail-slow window closes. Timing needs no update — every
         commitment's end already prices the full window — but replanning
         policies get the same revisit hook a recovery grants."""
-        self.event_log.append(("slowend", now, tier,
+        self._log(("slowend", now, tier,
                                -1 if ward is None else ward))
         self._after_fleet_event(tier, ward, now)
 
@@ -912,7 +960,13 @@ class MetroEngine:
                       ES: list(self.edges[b].reserved)},
             machines_per_tier={CC: len(self.cloud.slots),
                                ES: len(self.edges[b].slots)})
-        t = self._hedge_fn(req, now)
+        if self._prof is not None:
+            _h0 = time.perf_counter()          # reprolint: disable=R002
+            t = self._hedge_fn(req, now)
+            self._prof.hedge_hook += (
+                time.perf_counter() - _h0)     # reprolint: disable=R002
+        else:
+            t = self._hedge_fn(req, now)
         if t is None:
             return
         if t not in _DECISIONS - {SHED} or t == c.machine:
@@ -922,7 +976,7 @@ class MetroEngine:
                 f"{c.machine!r}, or None")
         self.hedged[b][i] = True
         self.metrics.record_hedge(t)
-        self.event_log.append(("hedge", now, b, i, c.machine, t))
+        self._log(("hedge", now, b, i, c.machine, t))
         if self._san is not None:
             self._san.on_hedge(b, i)
         arrival = now + spec.trans.get(t, 0.0)
@@ -936,10 +990,12 @@ class MetroEngine:
                                           slot=-1, planned_at=now)
             self._replay(now, edge_wards=[b] if t == ES else (),
                          cloud=t == CC)
+        if self._tracer is not None:
+            self._tracer.on_hedge_dispatch(now, b, i, self.hedges[(b, i)])
 
     def _on_recover(self, now: float, tier: str,
                     ward: Optional[int]) -> None:
-        self.event_log.append(("recover", now, tier,
+        self._log(("recover", now, tier,
                                -1 if ward is None else ward))
         self._after_fleet_event(tier, ward, now)
 
@@ -961,7 +1017,7 @@ class MetroEngine:
                 slot = pool.slots[k]
                 slot.retired_at = max(self._slot_frees(pool, now)[k], now)
                 slot.down = _INF
-        self.event_log.append(("scale", now, ev.tier,
+        self._log(("scale", now, ev.tier,
                                -1 if ev.ward is None else ev.ward,
                                ev.delta))
         self._after_fleet_event(ev.tier, ev.ward, now)
@@ -1002,19 +1058,26 @@ class MetroEngine:
             factors.remove(ev.factor)
             if not factors:
                 del self._net[ev.tier]
-        self.event_log.append(("net", now, ev.tier, ev.factor, int(on)))
+        self._log(("net", now, ev.tier, ev.factor, int(on)))
         if self.policy.replans_on_fleet_events:
             self._decide(range(self.B), now)
 
     # ---------------------------------------------------------------- run
-    def run(self, sanitize: bool = False) -> MetroResult:
+    def run(self, sanitize: bool = False, trace: bool = False,
+            profile: bool = False) -> MetroResult:
         """Drain the event heap. ``sanitize=True`` attaches the
         read-only `MetroSanitizer` (DESIGN.md §14): every replay,
         terminal event and hedge dispatch is validated against the
         engine invariants I1–I7 and a `SanitizerViolation` is raised on
-        the first breach. The sanitizer never mutates state or touches
-        the event log, so sanitized runs hash bit-identically to
-        unsanitized ones."""
+        the first breach. ``trace=True`` attaches the flight recorder
+        (`MetroTracer`, DESIGN.md §15): per-job spans and deadline-miss
+        attribution land on ``MetroResult.trace``. ``profile=True`` arms
+        the self-profiler: wall-clock phase timers (replay / policy /
+        sanitizer / hedge hook / per-event-kind handlers) plus the
+        compiled-shape cache delta land on ``MetroResult.profile``.
+        All three observers are read-only — they never mutate state,
+        push events or touch the event log, so armed runs hash
+        bit-identically to bare ones."""
         if self._ran:
             raise ValueError("a MetroEngine instance runs once; build a "
                              "fresh one per policy")
@@ -1022,6 +1085,15 @@ class MetroEngine:
         if sanitize:
             from repro.metro.sanitizer import MetroSanitizer
             self._san = MetroSanitizer(self)
+        if trace:
+            from repro.metro.tracing import MetroTracer
+            self._tracer = MetroTracer(self)
+        if profile:
+            from repro.core.scheduler import compiled_shape_stats
+            from repro.metro.tracing import EngineProfile
+            self._prof = EngineProfile(
+                shapes_before=compiled_shape_stats())
+        prof = self._prof
         # bench-timing block: measures wall-clock THROUGHPUT of the run;
         # simulated time lives only in the event heap
         t0 = time.perf_counter()        # reprolint: disable=R002
@@ -1032,6 +1104,8 @@ class MetroEngine:
             self._t_end = max(self._t_end, t)
             self._events += 1
             kind = payload[0]
+            if prof is not None:
+                _h0 = time.perf_counter()      # reprolint: disable=R002
             if kind == "complete":
                 self._on_complete(t, *payload[1:])
             elif kind == "hcomplete":
@@ -1054,10 +1128,17 @@ class MetroEngine:
                 self._on_hedge(t, *payload[1:])
             else:
                 self._on_recover(t, *payload[1:])
+            if prof is not None:
+                prof.add_handler(
+                    kind,
+                    time.perf_counter() - _h0)  # reprolint: disable=R002
         seconds = time.perf_counter() - t0   # reprolint: disable=R002
 
         if self._san is not None:
             self._san.at_exit(self._t_end)
+        # close the in-progress metrics window so short runs report a
+        # populated windowed snapshot (the §10 flush fix)
+        self.metrics.flush()
         for b, flags in enumerate(self.finished):
             missing = [i for i, ok in enumerate(flags) if not ok]
             if missing:
@@ -1076,11 +1157,21 @@ class MetroEngine:
                                  for e in entries),
                 unweighted_sum=sum(e.response for e in entries),
                 last_end=max((e.end for e in entries), default=0.0)))
+        trace_obj = None
+        if self._tracer is not None:
+            trace_obj = self._tracer.finish()
+        prof_out = None
+        if prof is not None:
+            from repro.core.scheduler import compiled_shape_stats
+            prof.heap_pushes = self._seq
+            prof_out = prof.summary(seconds, self._events,
+                                    shapes_after=compiled_shape_stats())
         return MetroResult(policy=getattr(self.policy, "name", "?"),
                            wards=wards, metrics=self.metrics,
                            utilization=self._utilization(),
                            event_log=self.event_log, events=self._events,
-                           seconds=seconds)
+                           seconds=seconds, trace=trace_obj,
+                           profile=prof_out)
 
     def _utilization(self) -> Dict[str, float]:
         t_end = self._t_end
@@ -1110,7 +1201,9 @@ def simulate_metro(ward_traces: Sequence[Sequence[JobSpec]],
                    max_attempts: Union[int, Mapping[str, int],
                                        None] = None,
                    metrics: MetroMetrics | None = None,
-                   sanitize: bool = False) -> MetroResult:
+                   sanitize: bool = False,
+                   trace: bool = False,
+                   profile: bool = False) -> MetroResult:
     """Build-and-run convenience wrapper (one engine per policy run)."""
     return MetroEngine(ward_traces, policy,
                        machines_per_tier=machines_per_tier,
@@ -1119,4 +1212,5 @@ def simulate_metro(ward_traces: Sequence[Sequence[JobSpec]],
                        slowdowns=slowdowns, hedge_factor=hedge_factor,
                        retry_backoff=retry_backoff,
                        max_attempts=max_attempts,
-                       metrics=metrics).run(sanitize=sanitize)
+                       metrics=metrics).run(sanitize=sanitize,
+                                            trace=trace, profile=profile)

@@ -112,6 +112,7 @@ class _Window:
         self.hist = StreamingQuantiles(*hist_shape)
         self.completions = 0
         self.misses = 0
+        self.sheds = 0
 
 
 class MetroMetrics:
@@ -222,6 +223,7 @@ class MetroMetrics:
         row = self.by_class.setdefault(cls, [0, 0, 0])
         row[2] += 1
         self._open.misses += 1
+        self._open.sheds += 1
         if now > self.last_time:
             self.last_time = now
 
@@ -245,6 +247,17 @@ class MetroMetrics:
         self.hedge_waste += wasted
         self.hedge_waste_by_tier[tier] = \
             self.hedge_waste_by_tier.get(tier, 0.0) + wasted
+
+    def flush(self) -> None:
+        """Close the in-progress window into the ring. The engine calls
+        this once at exit: without it a run shorter than one roll width
+        never lands a window in `recent`, so the windowed snapshot of a
+        short run reads all-zeros even though jobs finished. Idempotent
+        (the window moves, nothing is double-counted), and a later
+        record() simply opens a fresh window."""
+        if self._open is not None:
+            self.recent.append(self._open)
+            self._open = None
 
     # ------------------------------------------------------------ reading
     @property
@@ -301,9 +314,25 @@ class MetroMetrics:
             merged.merge(self._open.hist)
         return merged.quantile(q)
 
+    def _recent_counts(self) -> tuple:
+        """(finished, misses, windows) over the ring + open window; a
+        shed job finished (and missed) in its window, like miss_rate."""
+        windows = list(self.recent)
+        if self._open is not None:
+            windows.append(self._open)
+        done = sum(w.completions + w.sheds for w in windows)
+        miss = sum(w.misses for w in windows)
+        return done, miss, len(windows)
+
     def summary(self, utilization: Dict[str, float] | None = None) -> dict:
         """Flat report dict (serve's policy table / the metro benchmark)."""
+        r_done, r_miss, r_windows = self._recent_counts()
         return {
+            "recent_windows": r_windows,
+            "recent_finished": r_done,
+            "recent_misses": r_miss,
+            "recent_miss_rate": r_miss / r_done if r_done else 0.0,
+            "recent_p99": self.recent_quantile(0.99),
             "completions": self.completions,
             "shed": self.shed,
             "shed_rate": self.shed_rate,
